@@ -1,0 +1,74 @@
+"""Shared benchmark scaffolding: tenant combinations + CSV emission.
+
+Model combinations map the paper's Table 1 onto the assigned architectures
+(GPU memory reservation = params + a small KV headroom, the regime where the
+KV cache is the contended resource, as in the paper):
+
+  C1 (3 tenants): llama3-8b, granite-3-8b, h2o-danube-3-4b
+  C2 (2 tenants): phi3-medium-14b (big), h2o-danube-3-4b (small)
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.configs import ARCHS
+from repro.serving.hw import GH200, HardwareSpec
+from repro.serving.perf_model import PerfModel
+from repro.serving.simulator import SimTenantConfig, Simulator
+from repro.serving.traces import TraceSpec, make_trace
+
+
+def frac(name: str, kv_gb: float, hw: HardwareSpec = GH200) -> float:
+    pm = PerfModel(ARCHS[name], hw)
+    return (pm.param_bytes + kv_gb * 2**30) / hw.hbm_bytes
+
+
+def c1_tenants(kv_gb: float = 1.0) -> Dict[str, SimTenantConfig]:
+    return {
+        "llama3-8b": SimTenantConfig(
+            ARCHS["llama3-8b"], 64, frac("llama3-8b", kv_gb)),
+        "granite-3-8b": SimTenantConfig(
+            ARCHS["granite-3-8b"], 64, frac("granite-3-8b", kv_gb)),
+        "h2o-danube-3-4b": SimTenantConfig(
+            ARCHS["h2o-danube-3-4b"], 64, frac("h2o-danube-3-4b", kv_gb)),
+    }
+
+
+def c2_tenants(kv_gb: float = 1.5) -> Dict[str, SimTenantConfig]:
+    return {
+        "phi3-medium-14b": SimTenantConfig(
+            ARCHS["phi3-medium-14b"], 64, frac("phi3-medium-14b", kv_gb)),
+        "h2o-danube-3-4b": SimTenantConfig(
+            ARCHS["h2o-danube-3-4b"], 64, frac("h2o-danube-3-4b", kv_gb / 1.5)),
+    }
+
+
+def trace_for(tenants, dataset: str, rate: float, duration: float = 20.0,
+              seed: int = 1, rates: Dict[str, float] = None):
+    specs = []
+    for name in tenants:
+        r = rates.get(name, rate) if rates else rate
+        specs.append(TraceSpec(name, dataset, r, duration=duration))
+    return make_trace(specs, seed=seed)
+
+
+def run_sim(tenants, trace, mode: str, **kw):
+    sim = Simulator(tenants, mode=mode, **kw)
+    met = sim.run(trace)
+    return met, sim
+
+
+def emit(rows: List[List], header: List[str]) -> None:
+    print(",".join(header))
+    for r in rows:
+        print(",".join(f"{x:.6g}" if isinstance(x, float) else str(x)
+                       for x in r))
+
+
+def timed(fn, *a, reps: int = 3, **kw):
+    fn(*a, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*a, **kw)
+    return out, (time.perf_counter() - t0) / reps * 1e6  # us

@@ -1,0 +1,214 @@
+"""One benchmark per paper table/figure (MIRAGE §7), on the simulator that
+drives the real Remapping Controller / policies with GH200-class timing.
+
+Each ``fig*`` function prints CSV rows; ``python -m benchmarks.run`` runs all.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (
+    c1_tenants, c2_tenants, emit, run_sim, trace_for,
+)
+from repro.serving.hw import GH200, TPU_V5E, TPU_V5E_PCIE
+
+
+# -------------------------------------------------------------- Fig 8: C1/C2
+def fig8_temporal(rates=(6.0, 12.0), datasets=("sharegpt", "alpaca")):
+    """MIRAGE vs vLLM, temporal sharing, C1 and C2 (paper Fig. 8)."""
+    rows = []
+    for combo, mk in (("C1", c1_tenants), ("C2", c2_tenants)):
+        for ds in datasets:
+            for rate in rates:
+                for mode in ("vllm", "mirage"):
+                    tn = mk()
+                    met, _ = run_sim(tn, trace_for(tn, ds, rate), mode,
+                                     scheduler="temporal", hw=GH200)
+                    rows.append(["fig8", combo, ds, rate, mode,
+                                 met.p99_tbt, met.p99_ttft,
+                                 met.throughput_tok_s, met.preemptions])
+    emit(rows, ["bench", "combo", "dataset", "rate", "mode",
+                "p99_tbt_s", "p99_ttft_s", "tok_per_s", "preempt"])
+    return rows
+
+
+# ------------------------------------------------- Fig 9: varied arrival rates
+def fig9_varied_rates():
+    rows = []
+    tn = c2_tenants()
+    names = list(tn)
+    for ra, rb in ((4.0, 12.0), (12.0, 4.0), (8.0, 16.0)):
+        for mode in ("vllm", "mirage"):
+            met, _ = run_sim(
+                tn, trace_for(tn, "sharegpt", 0.0,
+                              rates={names[0]: ra, names[1]: rb}),
+                mode, scheduler="temporal", hw=GH200)
+            rows.append(["fig9", f"{ra}/{rb}", mode, met.p99_tbt,
+                         met.p99_ttft, met.throughput_tok_s])
+    emit(rows, ["bench", "rates", "mode", "p99_tbt_s", "p99_ttft_s",
+                "tok_per_s"])
+    return rows
+
+
+# ---------------------------------------------------- Fig 10: varied inputs
+def fig10_varied_inputs():
+    rows = []
+    tn = c2_tenants()
+    names = list(tn)
+    for combo in (("synthetic_long", "synthetic_short"),
+                  ("synthetic_short", "synthetic_long")):
+        trace = (trace_for({names[0]: tn[names[0]]}, combo[0], 8.0)
+                 + trace_for({names[1]: tn[names[1]]}, combo[1], 8.0, seed=2))
+        trace.sort(key=lambda r: r.arrival)
+        for mode in ("vllm", "mirage"):
+            met, _ = run_sim(tn, trace, mode, scheduler="temporal", hw=GH200)
+            rows.append(["fig10", f"{combo[0][10:]}+{combo[1][10:]}", mode,
+                         met.p99_tbt, met.p99_ttft, met.throughput_tok_s])
+    emit(rows, ["bench", "inputs", "mode", "p99_tbt_s", "p99_ttft_s",
+                "tok_per_s"])
+    return rows
+
+
+# ------------------------------------------------------- Fig 11: MRU vs LRU
+def fig11_mru_lru():
+    rows = []
+    tn = c1_tenants()
+    for policy in ("mru", "lru"):
+        met, sim = run_sim(
+            tn, trace_for(tn, "sharegpt", 10.0), "mirage",
+            scheduler="temporal", hw=GH200, victim_policy=policy,
+            quantum_steps=16)
+        rows.append(["fig11", policy, met.p99_tbt, met.p99_ttft,
+                     met.throughput_tok_s,
+                     sum(1 for d in sim.controller.decisions_log)])
+    emit(rows, ["bench", "victim_policy", "p99_tbt_s", "p99_ttft_s",
+                "tok_per_s", "remap_decisions"])
+    return rows
+
+
+# --------------------------------------------- Fig 12/13: spatial sharing
+def fig12_spatial():
+    rows = []
+    for rate in (6.0, 12.0):
+        for mode in ("vllm", "mirage"):
+            tn = c1_tenants()
+            met, _ = run_sim(tn, trace_for(tn, "alpaca", rate), mode,
+                             scheduler="spatial", hw=GH200)
+            rows.append(["fig12", rate, mode, met.p99_tbt, met.p99_ttft,
+                         met.throughput_tok_s])
+    emit(rows, ["bench", "rate", "mode", "p99_tbt_s", "p99_ttft_s",
+                "tok_per_s"])
+    return rows
+
+
+# ----------------------------- Fig 13: spatial sharing, strict isolation
+def fig13_strict_isolation():
+    """MIG-style strict partitions: each tenant runs alone in its slice
+    (the paper notes this degenerates to single-model serving; remapping
+    still reclaims the tenant's own idle-layer memory)."""
+    rows = []
+    for rate in (8.0, 16.0):
+        for mode in ("vllm", "mirage"):
+            agg_tbt, agg_ttft, agg_thru = [], [], 0.0
+            for name, tc in c1_tenants().items():
+                tn = {name: tc}
+                met, _ = run_sim(tn, trace_for(tn, "sharegpt", rate), mode,
+                                 scheduler="spatial", hw=GH200)
+                agg_tbt.append(met.p99_tbt)
+                agg_ttft.append(met.p99_ttft)
+                agg_thru += met.throughput_tok_s
+            rows.append(["fig13", rate, mode, max(agg_tbt), max(agg_ttft),
+                         agg_thru])
+    emit(rows, ["bench", "rate", "mode", "p99_tbt_s", "p99_ttft_s",
+                "tok_per_s"])
+    return rows
+
+
+# --------------------------------------- Fig 14: vs Pie-style KV swapping
+def fig14_swap_vs_remap():
+    """Single-model (paper: OPT-13b+Alpaca) remap vs swap vs recompute, on a
+    GH200-class link and on a PCIe-class link (paper §3's contrast)."""
+    import dataclasses as _dc
+    rows = []
+    from benchmarks.common import frac
+    from repro.configs import ARCHS
+    from repro.serving.simulator import SimTenantConfig
+    pcie = _dc.replace(GH200, name="gh200_pcie_link", host_link_bw=64e9)
+    for hw_name, hw in (("gh200", GH200), ("pcie-link", pcie)):
+        for mode in ("vllm", "swap", "mirage"):
+            tn = {"granite-3-8b": SimTenantConfig(
+                ARCHS["granite-3-8b"], 128, frac("granite-3-8b", 0.75))}
+            met, _ = run_sim(tn, trace_for(tn, "sharegpt", 20.0), mode,
+                             scheduler="temporal", hw=hw)
+            rows.append(["fig14", hw_name, mode, met.p99_tbt, met.p99_ttft,
+                         met.throughput_tok_s, met.preemptions])
+    emit(rows, ["bench", "hw", "mode", "p99_tbt_s", "p99_ttft_s",
+                "tok_per_s", "preempt"])
+    return rows
+
+
+# ------------------------------------- Fig 15: layer selection / buffering
+def _single_tenant():
+    """Paper §7.4-7.6 setup: ONE model under its own memory pressure, so the
+    *active* model must stream its remapped layers every token."""
+    from benchmarks.common import frac
+    from repro.configs import ARCHS
+    from repro.serving.simulator import SimTenantConfig
+    return {"granite-3-8b": SimTenantConfig(
+        ARCHS["granite-3-8b"], 256, frac("granite-3-8b", 2.0))}
+
+
+def fig15_layer_selection():
+    rows = []
+    for label, kw in (
+            ("A_single", dict(buffer_mode="single")),
+            ("B_double", dict(buffer_mode="double")),
+            ("C_dynamic", dict(buffer_mode="dynamic")),
+            ("contiguous", dict(buffer_mode="dynamic",
+                                uniform_selection=False))):
+        tn = _single_tenant()
+        met, sim = run_sim(tn, trace_for(tn, "sharegpt", 20.0), "mirage",
+                           scheduler="temporal", hw=GH200,
+                           pipeline_cap=False, max_remap_fraction=0.3, **kw)
+        rows.append(["fig15", label, met.p99_tbt, met.p50_tbt,
+                     met.throughput_tok_s])
+    emit(rows, ["bench", "scheme", "p99_tbt_s", "p50_tbt_s", "tok_per_s"])
+    return rows
+
+
+# ------------------------------------------- Fig 16: dynamic reversion CDF
+def fig16_dynamic_reversion():
+    rows = []
+    for rate in (4.0, 20.0):
+        for rev in (True, False):
+            tn = _single_tenant()
+            met, _ = run_sim(tn, trace_for(tn, "sharegpt", rate,
+                                           duration=30.0), "mirage",
+                             scheduler="temporal", hw=GH200,
+                             pipeline_cap=False, max_remap_fraction=0.3,
+                             dynamic_reversion=rev)
+            rows.append(["fig16", rate, "on" if rev else "off",
+                         met.p50_tbt, met.p99_tbt, met.throughput_tok_s])
+    emit(rows, ["bench", "rate", "reversion", "p50_tbt_s", "p99_tbt_s",
+                "tok_per_s"])
+    return rows
+
+
+# ------------------------------------------------ Fig 17: capped remap %
+def fig17_remap_cap():
+    rows = []
+    for label, kw in (
+            ("capped_0.1", dict(max_remap_fraction=0.1, pipeline_cap=True)),
+            ("capped_0.3", dict(max_remap_fraction=0.3, pipeline_cap=True)),
+            ("uncapped", dict(max_remap_fraction=1.0, pipeline_cap=False))):
+        tn = _single_tenant()
+        met, _ = run_sim(tn, trace_for(tn, "sharegpt", 20.0), "mirage",
+                         scheduler="temporal", hw=GH200, **kw)
+        rows.append(["fig17", label, met.p50_tbt, met.p99_tbt,
+                     met.p99_ttft, met.throughput_tok_s, met.preemptions])
+    emit(rows, ["bench", "cap", "p50_tbt_s", "p99_tbt_s", "p99_ttft_s",
+                "tok_per_s", "preempt"])
+    return rows
+
+
+ALL = [fig8_temporal, fig9_varied_rates, fig10_varied_inputs, fig11_mru_lru,
+       fig12_spatial, fig13_strict_isolation, fig14_swap_vs_remap,
+       fig15_layer_selection, fig16_dynamic_reversion, fig17_remap_cap]

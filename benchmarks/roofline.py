@@ -1,0 +1,150 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Terms per (arch x shape x mesh), v5e constants per the assignment:
+  compute    = FLOPs / (chips * 197e12)            [analytic, impl-faithful]
+  memory     = HBM bytes / (chips * 819e9)         [analytic]
+  collective = per-device collective bytes / 50e9  [parsed from post-SPMD
+               HLO with while-trip multiplication — real compiled schedule]
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline            # table (markdown)
+  PYTHONPATH=src python -m benchmarks.roofline --csv
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+HBM_BYTES = 16 * 2**30
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_records(mesh: str = "single_pod", pattern: str = "*",
+                 art_dir: str = None, variants: bool = False) -> List[Dict]:
+    out = []
+    base = art_dir or ART
+    for p in sorted(glob.glob(os.path.join(base, mesh, f"{pattern}.json"))):
+        name = os.path.basename(p)[:-5]
+        is_variant = any(t in name for t in ("__remap", "__mb", "__serving",
+                                             "__train-ef", "__remat"))
+        if is_variant != variants:
+            continue
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def _fresh_analytic(rec: Dict) -> Dict:
+    """Recompute the analytic cost from configs at read time so model
+    refinements apply without recompiling artifacts (HLO-derived facts —
+    memory_analysis, collectives — stay as compiled)."""
+    from repro.configs import get_arch, SHAPES_BY_NAME
+    from repro.distributed.analytic_cost import cost_for
+    mesh_shape = rec["mesh"]["shape"]
+    shards = 1
+    for ax in ("pod", "data"):
+        shards *= mesh_shape.get(ax, 1)
+    cost = cost_for(get_arch(rec["arch"]), SHAPES_BY_NAME[rec["shape"]], shards)
+    return {
+        "total_flops": cost.total_flops,
+        "total_hbm_bytes": cost.total_bytes,
+        "model_flops": cost.model_flops,
+        "useful_fraction": cost.useful_fraction,
+        "flops_by_component": cost.flops,
+        "hbm_bytes_by_component": cost.hbm_bytes,
+    }
+
+
+def terms(rec: Dict) -> Dict[str, float]:
+    chips = rec["mesh"]["devices"]
+    a = _fresh_analytic(rec)
+    compute = a["total_flops"] / (chips * PEAK_FLOPS)
+    memory = a["total_hbm_bytes"] / (chips * HBM_BW)
+    coll = rec.get("collectives", {}).get("total_bytes", 0) / LINK_BW
+    dom = max(("compute", compute), ("memory", memory),
+              ("collective", coll), key=lambda kv: kv[1])[0]
+    m = rec["memory"]
+    per_dev = m["argument_bytes"] + m["temp_bytes"] - m["alias_bytes"]
+    bound = max(compute, memory, coll)
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": coll,
+        "dominant": dom,
+        "step_s": bound,
+        # fraction of the step the chips would spend doing useful math if
+        # perfectly overlapped: (useful flops / peak) / bound
+        "roofline_fraction": (a["model_flops"] / (chips * PEAK_FLOPS)) / bound
+        if bound > 0 else 0.0,
+        "useful_fraction": a["useful_fraction"],
+        "per_device_gib": per_dev / 2**30,
+        "fits_hbm": per_dev <= HBM_BYTES,
+        "hlo_flops_raw": rec["cost_analysis_raw"]["flops"],
+    }
+
+
+def what_would_help(rec: Dict, t: Dict) -> str:
+    if t["dominant"] == "memory":
+        if rec["shape"].startswith("decode") or rec["shape"].startswith("long"):
+            return "decode is HBM-bound on params+KV: raise batch, shrink KV (GQA/quant/paged), or remap more params off-device"
+        return "raise arithmetic intensity: larger microbatch, fewer param re-reads (FSDP prefetch)"
+    if t["dominant"] == "compute":
+        if t["useful_fraction"] < 0.6:
+            return "compute is majority overhead (remat/capacity padding/rect-attention): cut recompute or pad"
+        return "near compute roofline: only kernel-level gains (fusion, MXU util) remain"
+    return "collective-bound: rebalance sharding axes / overlap collectives with compute"
+
+
+def table(recs: List[Dict], fmt: str = "md") -> str:
+    rows = []
+    header = ["arch", "shape", "chips", "compute_s", "memory_s",
+              "collective_s", "dominant", "roofline%", "useful%",
+              "GiB/dev", "fits"]
+    for rec in recs:
+        t = terms(rec)
+        rows.append([
+            rec["arch"], rec["shape"], rec["mesh"]["devices"],
+            f"{t['compute_s']:.3e}", f"{t['memory_s']:.3e}",
+            f"{t['collective_s']:.3e}", t["dominant"],
+            f"{100*t['roofline_fraction']:.1f}",
+            f"{100*t['useful_fraction']:.1f}",
+            f"{t['per_device_gib']:.2f}", "y" if t["fits_hbm"] else "N",
+        ])
+    if fmt == "csv":
+        return "\n".join(",".join(map(str, r)) for r in [header] + rows)
+    w = [max(len(str(r[i])) for r in [header] + rows) for i in range(len(header))]
+    fmt_row = lambda r: "| " + " | ".join(str(c).ljust(w[i]) for i, c in enumerate(r)) + " |"
+    sep = "|" + "|".join("-" * (x + 2) for x in w) + "|"
+    return "\n".join([fmt_row(header), sep] + [fmt_row(r) for r in rows])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single_pod")
+    ap.add_argument("--pattern", default="*")
+    ap.add_argument("--dir", default=None, help="artifact dir override")
+    ap.add_argument("--variants", action="store_true",
+                    help="show tagged variant cells instead of baselines")
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--notes", action="store_true",
+                    help="print per-cell bottleneck notes")
+    args = ap.parse_args()
+    recs = load_records(args.mesh, args.pattern, args.dir, args.variants)
+    print(table(recs, "csv" if args.csv else "md"))
+    if args.notes:
+        print()
+        for rec in recs:
+            t = terms(rec)
+            print(f"- {rec['arch']} x {rec['shape']}: {t['dominant']}-bound; "
+                  f"{what_would_help(rec, t)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Benchmark entry point: one function per paper table/figure + kernel
+microbenches + the roofline summary. Prints CSV blocks.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig8,kernels
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def bench_kernels():
+    """Kernel call latency (CPU interpret / ref path — correctness-path cost,
+    NOT TPU perf; TPU numbers come from the roofline) + analytic terms."""
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.common import emit, timed
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    from repro.kernels.paged_attention.ref import paged_decode_attention_ref
+
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    for (B, S, Hq, Hkv, D) in [(1, 512, 8, 2, 64), (2, 1024, 8, 8, 64)]:
+        q = jax.random.normal(ks[0], (B, S, Hq, D), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+        v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+        fn = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v, causal=True))
+        _, us = timed(lambda: jax.block_until_ready(fn(q, k, v)))
+        flops = 2 * 2 * B * S * S * Hq * D
+        rows.append(["kernels", f"flash_b{B}_s{S}", us, flops / 197e12 * 1e6])
+    for (B, Hq, Hkv, D, P, page, N) in [(4, 8, 2, 64, 64, 16, 16)]:
+        q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32)
+        kp = jax.random.normal(ks[1], (P, page, Hkv, D), jnp.float32)
+        vp = jax.random.normal(ks[2], (P, page, Hkv, D), jnp.float32)
+        pt = jnp.tile(jnp.arange(N, dtype=jnp.int32)[None], (B, 1))
+        ctx = jnp.full((B,), N * page, jnp.int32)
+        fn = jax.jit(lambda *a: paged_decode_attention_ref(*a))
+        _, us = timed(lambda: jax.block_until_ready(fn(q, kp, vp, pt, ctx)))
+        kv_bytes = B * N * page * Hkv * D * 2 * 4
+        rows.append(["kernels", f"paged_b{B}_ctx{N*page}", us,
+                     kv_bytes / 819e9 * 1e6])
+    from repro.kernels.ssd_scan.ref import ssd_scan_ref
+    for (B, T, H, dk, dv) in [(2, 512, 4, 16, 64)]:
+        q = jax.random.normal(ks[0], (B, T, H, dk), jnp.float32)
+        k = jax.random.normal(ks[1], (B, T, H, dk), jnp.float32)
+        v = jax.random.normal(ks[2], (B, T, H, dv), jnp.float32)
+        la = -jax.nn.softplus(jax.random.normal(ks[3], (B, T, H)))
+        fn = jax.jit(lambda *a: ssd_scan_ref(*a)[0])
+        _, us = timed(lambda: jax.block_until_ready(fn(q, k, v, la)))
+        flops = 2 * B * T * 128 * H * (dk + dv)
+        rows.append(["kernels", f"ssd_b{B}_t{T}", us, flops / 197e12 * 1e6])
+    emit(rows, ["bench", "name", "us_per_call", "tpu_roofline_us"])
+    return rows
+
+
+def bench_roofline():
+    from benchmarks.roofline import load_records, table
+    for mesh in ("single_pod", "multi_pod"):
+        recs = load_records(mesh)
+        if recs:
+            print(f"# roofline {mesh} ({len(recs)} cells)")
+            print(table(recs, "csv"))
+        else:
+            print(f"# roofline {mesh}: no dry-run artifacts "
+                  f"(run python -m repro.launch.dryrun first)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: fig8,fig9,...,kernels,roofline")
+    args = ap.parse_args()
+
+    from benchmarks import figures
+    registry = {f.__name__.split("_")[0]: f for f in figures.ALL}
+    registry["kernels"] = bench_kernels
+    registry["roofline"] = bench_roofline
+
+    wanted = [w for w in args.only.split(",") if w] or list(registry)
+    t0 = time.time()
+    for name in wanted:
+        fn = registry.get(name)
+        if fn is None:
+            print(f"# unknown bench {name!r}", file=sys.stderr)
+            continue
+        print(f"# === {fn.__name__} ===")
+        fn()
+        print()
+    print(f"# total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

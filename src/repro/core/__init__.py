@@ -1,0 +1,14 @@
+"""MIRAGE core — the paper's contribution: dynamic parameter remapping."""
+from repro.core.layer_selection import (
+    uniform_interval_layers, min_circular_gap, beta1_feasible, beta2_feasible,
+    choose_m, max_alpha, make_plan, RemapPlan,
+)
+from repro.core.metadata_store import MetadataStore, ModelInfo, MemoryInfo
+from repro.core.remap_policy import victim_order, next_victim, next_revert
+from repro.core.remapping_controller import (
+    RemappingController, ControllerConfig, RemapDecision,
+)
+from repro.core.kv_allocator import PagedKVAllocator, Segment
+from repro.core.transfer_engine import (
+    TransferEngine, split_blocks, merge_blocks, make_fetch,
+)

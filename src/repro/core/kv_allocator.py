@@ -1,0 +1,131 @@
+"""Paged KV allocator with elastic segments (paper §6, vAttention-adapted).
+
+The pool is a set of *segments* of pages. Segment 0 is the static KV
+reservation; further segments are backed by device memory donated by
+remapped parameters (the JAX analogue of vAttention's physical-page
+remapping: at a tier switch the evicted parameter stack is donated and a
+KV segment of the same size allocated — the runtime allocator reuses the
+freed HBM; page tables span segments so compiled attention sees one pool).
+
+Invariants (property-tested):
+  * a page is owned by at most one sequence;
+  * used + free == total across all live segments;
+  * segments only shrink when none of their pages are in use.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Segment:
+    start: int            # first global page id
+    num_pages: int
+    source: str           # "static" | model name that donated the memory
+
+    @property
+    def end(self) -> int:
+        return self.start + self.num_pages
+
+
+class PagedKVAllocator:
+    def __init__(self, base_pages: int, page_size: int):
+        self.page_size = page_size
+        self.segments: List[Segment] = [Segment(0, base_pages, "static")]
+        self._next_start = base_pages
+        self.free_list: List[int] = list(range(base_pages))
+        self.owner: Dict[int, str] = {}                 # page -> request id
+        self.seq_pages: Dict[str, List[int]] = {}       # request id -> pages
+        self.seq_tokens: Dict[str, int] = {}
+
+    # ------------------------------------------------------------- capacity
+    @property
+    def total_pages(self) -> int:
+        return sum(s.num_pages for s in self.segments)
+
+    @property
+    def used_pages(self) -> int:
+        return len(self.owner)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self.free_list)
+
+    def grow(self, num_pages: int, source: str) -> Segment:
+        seg = Segment(self._next_start, num_pages, source)
+        self._next_start += num_pages
+        self.segments.append(seg)
+        self.free_list.extend(range(seg.start, seg.end))
+        return seg
+
+    def segment_in_use(self, seg: Segment) -> bool:
+        return any(seg.start <= p < seg.end for p in self.owner)
+
+    def shrink(self, source: str) -> int:
+        """Release all unused segments donated by ``source``; returns pages
+        released. Segments with live pages are kept (caller retries later)."""
+        released = 0
+        keep = []
+        for seg in self.segments:
+            if seg.source == source and not self.segment_in_use(seg):
+                released += seg.num_pages
+                live = set(range(seg.start, seg.end))
+                self.free_list = [p for p in self.free_list if p not in live]
+            else:
+                keep.append(seg)
+        self.segments = keep
+        return released
+
+    # ------------------------------------------------------------ allocation
+    def pages_needed(self, num_tokens: int) -> int:
+        return -(-num_tokens // self.page_size)
+
+    def can_allocate(self, num_tokens: int) -> bool:
+        return self.pages_needed(num_tokens) <= self.free_pages
+
+    def allocate(self, rid: str, num_tokens: int) -> Optional[List[int]]:
+        """Allocate pages for ``num_tokens`` NEW tokens of request rid."""
+        have = self.seq_tokens.get(rid, 0)
+        cur_pages = len(self.seq_pages.get(rid, []))
+        need = self.pages_needed(have + num_tokens) - cur_pages
+        if need > len(self.free_list):
+            return None
+        pages = [self.free_list.pop() for _ in range(need)]
+        for p in pages:
+            self.owner[p] = rid
+        self.seq_pages.setdefault(rid, []).extend(pages)
+        self.seq_tokens[rid] = have + num_tokens
+        return self.seq_pages[rid]
+
+    def free(self, rid: str) -> int:
+        pages = self.seq_pages.pop(rid, [])
+        self.seq_tokens.pop(rid, None)
+        for p in pages:
+            del self.owner[p]
+        self.free_list.extend(pages)
+        return len(pages)
+
+    def page_table(self, rids: List[str], max_pages: int) -> np.ndarray:
+        """[len(rids), max_pages] int32, padded with page 0 (masked by
+        context_lens in the attention kernel)."""
+        out = np.zeros((len(rids), max_pages), np.int32)
+        for i, rid in enumerate(rids):
+            pages = self.seq_pages.get(rid, [])
+            out[i, :len(pages)] = pages
+        return out
+
+    def context_lens(self, rids: List[str]) -> np.ndarray:
+        return np.array([self.seq_tokens.get(r, 0) for r in rids], np.int32)
+
+    def check_invariants(self) -> None:
+        total = self.total_pages
+        assert len(self.free_list) + len(self.owner) == total, \
+            (len(self.free_list), len(self.owner), total)
+        assert len(set(self.free_list)) == len(self.free_list)
+        assert not (set(self.free_list) & set(self.owner))
+        live = {p for s in self.segments for p in range(s.start, s.end)}
+        assert set(self.owner).issubset(live)
+        assert set(self.free_list).issubset(live)

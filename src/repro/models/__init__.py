@@ -1,0 +1,3 @@
+from repro.models.registry import Model, build_model
+from repro.models.lm import LM
+from repro.models.encdec import EncDec

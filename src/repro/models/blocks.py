@@ -1,0 +1,652 @@
+"""Model blocks: attention (+KV caches), SwiGLU FFN, MoE, mamba (SSD form),
+mLSTM, sLSTM. Each block exposes:
+
+  specs(cfg)                        -> Spec tree (one layer, unstacked)
+  fwd_seq(p, x, ctx, cfg)           -> (x, cache_entry | None)   train/prefill
+  fwd_dec(p, x, state, shared, cfg) -> (x, new_state)            decode
+  init_state(cfg, batch, cache_len) -> zeroed decode-state entry (or specs)
+
+Conventions: x is [B, S, D] (seq modes) or [B, D] (decode). ``ctx`` carries
+positions; ``shared`` carries decode positions/validity shared by all layers.
+Caches store K/V **post-RoPE** at absolute positions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import (
+    get_mesh, with_sharding_constraint, num_data_shards, model_axis_size,
+    spec_for, get_rules,
+)
+from repro.models import attention_ops as aops
+from repro.models.common import Spec, dtype_of
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [..., S, H, D] or [..., H, D] (decode); positions [..., S] or [...]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, half]
+    angles = jnp.expand_dims(angles, axis=-2)                  # broadcast heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _einsum(subs, *args):
+    return jnp.einsum(subs, *args, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# attention block (self-attention; cross-attention variant for enc-dec)
+# ---------------------------------------------------------------------------
+
+class Attention:
+    """GQA attention with RoPE, optional sliding window, dense or ring cache."""
+
+    def __init__(self, cross: bool = False):
+        self.cross = cross
+
+    def specs(self, cfg: ModelConfig) -> Dict[str, Spec]:
+        d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+        dt = dtype_of(cfg)
+        return {
+            "wq": Spec((d, hq, hd), ("embed", "heads", "head_dim"), dt, fan_in=d),
+            "wk": Spec((d, hkv, hd), ("embed", "kv_heads", "head_dim"), dt, fan_in=d),
+            "wv": Spec((d, hkv, hd), ("embed", "kv_heads", "head_dim"), dt, fan_in=d),
+            "wo": Spec((hq, hd, d), ("heads", "head_dim", "embed"), dt, fan_in=hq * hd),
+        }
+
+    def cache_len(self, cfg: ModelConfig, max_context: int) -> int:
+        if cfg.sliding_window:
+            return min(max_context, cfg.sliding_window)
+        return max_context
+
+    def init_state(self, cfg: ModelConfig, batch: int, max_context: int):
+        hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        s = self.cache_len(cfg, max_context)
+        dt = dtype_of(cfg)
+        # batch=1 long-context cells shard the KV sequence over every mesh
+        # axis (pure context parallelism); otherwise batch covers data axes.
+        seq_logical = "kv_seq_full" if batch == 1 else "kv_seq"
+        return {
+            "k": Spec((batch, s, hkv, hd), ("batch", seq_logical, None, None), dt, "zeros"),
+            "v": Spec((batch, s, hkv, hd), ("batch", seq_logical, None, None), dt, "zeros"),
+        }
+
+    def _qkv(self, p, x, cfg):
+        q = _einsum("...d,dhk->...hk", x, p["wq"]).astype(x.dtype)
+        k = _einsum("...d,dhk->...hk", x, p["wk"]).astype(x.dtype)
+        v = _einsum("...d,dhk->...hk", x, p["wv"]).astype(x.dtype)
+        return q, k, v
+
+    def fwd_seq(self, p, x, ctx, cfg: ModelConfig):
+        """Train / prefill over a full sequence. ctx: dict with
+        'positions' [B,S]; for cross-attn: 'enc_out' [B,Senc,D];
+        'bidirectional' flag for encoder self-attention."""
+        positions = ctx["positions"]
+        if self.cross:
+            kv_src = ctx["enc_out"]
+            q = _einsum("bsd,dhk->bshk", x, p["wq"]).astype(x.dtype)
+            k = _einsum("bsd,dhk->bshk", kv_src, p["wk"]).astype(x.dtype)
+            v = _einsum("bsd,dhk->bshk", kv_src, p["wv"]).astype(x.dtype)
+            out = aops.flash_attention(q, k, v, causal=False)
+            cache = {"k": k, "v": v}           # immutable cross KV for decode
+        else:
+            q, k, v = self._qkv(p, x, cfg)
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+            q = with_sharding_constraint(q, ("batch", "seq_cp", "act_heads", None))
+            causal = not ctx.get("bidirectional", False)
+            out = aops.flash_attention(
+                q, k, v, q_pos=positions, kv_pos=positions,
+                causal=causal, window=cfg.sliding_window)
+            cache = {"k": k, "v": v}
+        y = _einsum("bshk,hkd->bsd", out, p["wo"]).astype(x.dtype)
+        return y, cache
+
+    def seq_cache_to_state(self, cfg, cache, max_context: int):
+        """Pad prefill K/V [B,S,...] into a decode cache [B,cache_len,...].
+        For ring (SWA) caches keeps the last `window` tokens at their slots."""
+        k, v = cache["k"], cache["v"]
+        b, s = k.shape[0], k.shape[1]
+        s_c = self.cache_len(cfg, max_context)
+        if self.cross:
+            return {"k": k, "v": v}
+        if cfg.sliding_window and s >= s_c:
+            # token t lives at slot t % window
+            last = s - s_c
+            idx = (last + jnp.arange(s_c)) % s_c
+            take = last + jnp.arange(s_c)
+            order = jnp.argsort(idx)
+            return {"k": k[:, take[order]], "v": v[:, take[order]]}
+        pad = [(0, 0), (0, s_c - s), (0, 0), (0, 0)]
+        return {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+
+    def fwd_dec(self, p, x, state, shared, cfg: ModelConfig):
+        """Decode one token. x [B, D]; state {k,v} [B,Sc,...];
+        shared: pos [B], kv_pos [B,Sc], kv_valid [B,Sc], slot [B]
+        (+ cross_pos/cross_valid and state['cross'] for enc-dec)."""
+        pos = shared["pos"]
+        if self.cross:
+            q = _einsum("bd,dhk->bhk", x, p["wq"]).astype(x.dtype)
+            out = aops.decode_attention(
+                q, state["k"], state["v"], pos,
+                shared["cross_pos"], shared["cross_valid"], causal=False)
+            y = _einsum("bhk,hkd->bd", out, p["wo"]).astype(x.dtype)
+            return y, state
+        q, k_new, v_new = self._qkv(p, x, cfg)
+        q = rope(q, pos, cfg.rope_theta)
+        k_new = rope(k_new, pos, cfg.rope_theta)
+        slot = shared["slot"]                      # [B] write index
+        write = lambda c, n, s: jax.vmap(
+            lambda cb, nb, sb: jax.lax.dynamic_update_slice(
+                cb, nb[None], (sb, 0, 0)))(c, n, s)
+        k_cache = write(state["k"], k_new, slot)
+        v_cache = write(state["v"], v_new, slot)
+        mesh = get_mesh()
+        kv_axes = _kv_shard_axes(mesh, k_cache.shape)
+        if kv_axes:
+            batch_axes = _batch_shard_axes(mesh, x.shape[0], kv_axes)
+            out = aops.distributed_decode_attention(
+                mesh, kv_axes, q, k_cache, v_cache, pos,
+                shared["kv_pos"], shared["kv_valid"],
+                window=cfg.sliding_window, batch_axes=batch_axes)
+        else:
+            out = aops.decode_attention(
+                q, k_cache, v_cache, pos, shared["kv_pos"], shared["kv_valid"],
+                window=cfg.sliding_window)
+        y = _einsum("bhk,hkd->bd", out, p["wo"]).astype(x.dtype)
+        return y, {"k": k_cache, "v": v_cache}
+
+
+def _kv_shard_axes(mesh, kv_shape) -> Tuple[str, ...]:
+    """Which mesh axes shard the KV-cache sequence dim (flash-decode)."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return ()
+    if mesh.shape["model"] == 1:
+        return ()
+    rules = get_rules()
+    logical = ("batch", "kv_seq_full" if kv_shape[0] == 1 else "kv_seq", None, None)
+    spec = spec_for(logical, kv_shape, mesh, rules)
+    seq_part = spec[1] if len(spec) > 1 else None
+    if seq_part is None:
+        return ()
+    return seq_part if isinstance(seq_part, tuple) else (seq_part,)
+
+
+def _batch_shard_axes(mesh, batch: int, kv_axes) -> Tuple[str, ...]:
+    axes = []
+    n = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names and ax not in kv_axes:
+            size = mesh.shape[ax]
+            if size > 1 and batch % (n * size) == 0:
+                axes.append(ax)
+                n *= size
+    return tuple(axes)
+
+
+# ---------------------------------------------------------------------------
+# dense FFN (SwiGLU)
+# ---------------------------------------------------------------------------
+
+class SwiGLU:
+    def specs(self, cfg: ModelConfig) -> Dict[str, Spec]:
+        d, f = cfg.d_model, cfg.d_ff
+        dt = dtype_of(cfg)
+        return {
+            "w_in": Spec((d, f), ("embed", "mlp"), dt, fan_in=d),
+            "w_gate": Spec((d, f), ("embed", "mlp"), dt, fan_in=d),
+            "w_out": Spec((f, d), ("mlp", "embed"), dt, fan_in=f),
+        }
+
+    def __call__(self, p, x):
+        h = _einsum("...d,df->...f", x, p["w_in"])
+        g = _einsum("...d,df->...f", x, p["w_gate"])
+        h = jax.nn.silu(g) * h
+        return _einsum("...f,fd->...d", h, p["w_out"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN: group-local sort-gather dispatch (no one-hot einsum), EP over
+# the `model` axis, FSDP over `expert_mlp`. Capacity auto-raises for tiny
+# token counts so decode never drops tokens.
+# ---------------------------------------------------------------------------
+
+class MoE:
+    def specs(self, cfg: ModelConfig) -> Dict[str, Spec]:
+        m = cfg.moe
+        d, e, f = cfg.d_model, m.num_experts, m.d_expert
+        dt = dtype_of(cfg)
+        return {
+            "router": Spec((d, e), ("embed", None), jnp.float32, fan_in=d),
+            "w_in": Spec((e, d, f), ("experts", "expert_mlp", "expert_ff"), dt, fan_in=d),
+            "w_gate": Spec((e, d, f), ("experts", "expert_mlp", "expert_ff"), dt, fan_in=d),
+            "w_out": Spec((e, f, d), ("experts", "expert_ff", "expert_mlp"), dt, fan_in=f),
+        }
+
+    @staticmethod
+    def _capacity(tokens_per_group: int, m) -> int:
+        lam = tokens_per_group * m.top_k / m.num_experts
+        c = int(math.ceil(lam * m.capacity_factor))
+        # Poisson +3σ floor: at decode-scale token counts the relative load
+        # fluctuation is large and cf alone drops ~3% of assignments
+        # (tests/test_moe_capacity_stats.py); +3σ keeps drops <0.1% while
+        # adding nothing at train scale where cf·λ dominates.
+        c3 = int(math.ceil(lam + 3.0 * math.sqrt(max(lam, 1e-9))))
+        return min(tokens_per_group, max(c, c3, m.min_capacity))
+
+    def __call__(self, p, x, cfg: ModelConfig):
+        """x [..., D] -> [..., D] (+ aux loss stored on .aux)."""
+        m = cfg.moe
+        orig_shape = x.shape
+        d = orig_shape[-1]
+        t = int(np.prod(orig_shape[:-1]))
+        xf = x.reshape(t, d)
+        mesh = get_mesh()
+        shards = num_data_shards(mesh) if mesh is not None else 1
+        # Decode-adaptive grouping (§Perf iteration 1): with few tokens,
+        # per-data-shard groups multiply the capacity padding by the group
+        # count (G groups x E experts x min-capacity slots for ~t*k useful
+        # assignments). One global group bounds padding at E*C ~ 3x useful
+        # instead of G*E*C ~ 48x.
+        if t * m.top_k <= 8 * m.num_experts:
+            g = 1
+        else:
+            g = math.gcd(t, shards) or 1
+        tg = t // g
+        cap = self._capacity(tg, m)
+        xg = xf.reshape(g, tg, d)
+        xg = with_sharding_constraint(xg, ("batch", None, None))
+
+        logits = _einsum("gtd,de->gte", xg, p["router"])          # f32
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, m.top_k)              # [g,tg,k]
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+        # ---- sort-gather dispatch ----------------------------------------
+        flat_e = top_e.reshape(g, tg * m.top_k)                   # expert ids
+        flat_w = top_p.reshape(g, tg * m.top_k)
+        flat_tok = jnp.broadcast_to(
+            jnp.arange(tg, dtype=jnp.int32)[:, None], (tg, m.top_k)
+        ).reshape(tg * m.top_k)
+        order = jnp.argsort(flat_e, axis=-1, stable=True)         # [g, tg*k]
+        sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+        sorted_tok = flat_tok[order]                              # [g, tg*k]
+        sorted_w = jnp.take_along_axis(flat_w, order, axis=-1)
+        # position within expert = rank - first-rank-of-that-expert
+        ar = jnp.arange(tg * m.top_k, dtype=jnp.int32)
+        first = jax.vmap(
+            lambda se: jnp.searchsorted(se, jnp.arange(m.num_experts), side="left")
+        )(sorted_e)                                               # [g, E]
+        pos_in_e = ar[None, :] - jnp.take_along_axis(first, sorted_e, axis=-1)
+        ok = pos_in_e < cap
+        slot = jnp.where(ok, sorted_e * cap + pos_in_e, m.num_experts * cap)
+        # dispatch_idx[e, c] = source token (tg = padding row)
+        disp = jnp.full((g, m.num_experts * cap + 1), tg, jnp.int32)
+        disp = jax.vmap(lambda d_, s_, t_: d_.at[s_].set(t_))(disp, slot, sorted_tok)
+        disp = disp[:, :-1].reshape(g, m.num_experts, cap)
+        wcomb = jnp.zeros((g, m.num_experts * cap + 1), flat_w.dtype)
+        wcomb = jax.vmap(lambda w_, s_, v_: w_.at[s_].set(v_))(wcomb, slot, sorted_w)
+        wcomb = wcomb[:, :-1].reshape(g, m.num_experts, cap)
+
+        xpad = jnp.concatenate([xg, jnp.zeros((g, 1, d), xg.dtype)], axis=1)
+        xd = jnp.take_along_axis(
+            xpad[:, :, None, :], disp.reshape(g, -1, 1, 1), axis=1
+        ).reshape(g, m.num_experts, cap, d)
+        xd = with_sharding_constraint(xd, ("batch", "experts", None, None))
+
+        h = _einsum("gecd,edf->gecf", xd, p["w_in"])
+        gate = _einsum("gecd,edf->gecf", xd, p["w_gate"])
+        h = jax.nn.silu(gate) * h
+        yd = _einsum("gecf,efd->gecd", h, p["w_out"]).astype(xg.dtype)
+        yd = yd * wcomb[..., None].astype(yd.dtype)
+        yd = with_sharding_constraint(yd, ("batch", "experts", None, None))
+
+        # ---- combine: scatter-add back to token order --------------------
+        out = jnp.zeros((g, tg + 1, d), yd.dtype)
+        out = jax.vmap(lambda o_, i_, v_: o_.at[i_].add(v_))(
+            out, disp.reshape(g, -1), yd.reshape(g, -1, d))
+        out = out[:, :tg]
+
+        # load-balance aux loss (Switch): E * sum(frac_tokens * frac_probs)
+        me = probs.mean(axis=(0, 1))
+        one_hot_top1 = jax.nn.one_hot(top_e[..., 0], m.num_experts)
+        ce = one_hot_top1.reshape(-1, m.num_experts).mean(axis=0)
+        aux = m.num_experts * jnp.sum(me * ce)
+        return out.reshape(orig_shape), aux
+
+
+# ---------------------------------------------------------------------------
+# Chunked scalar-decay linear attention (SSD): shared by mamba & mLSTM.
+#   y_t = q_t . S_t ;  S_t = a_t * S_{t-1} + k_t v_t^T        (per head)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(
+    q: jax.Array,        # [B, T, H, dk]
+    k: jax.Array,        # [B, T, H, dk]
+    v: jax.Array,        # [B, T, H, dv]
+    log_a: jax.Array,    # [B, T, H]  (log decay in (-inf, 0])
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # [B, H, dk, dv]
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunkwise-parallel linear recurrence (mamba-2 SSD / GLA style).
+    Returns (y [B,T,H,dv], final_state [B,H,dk,dv]). fp32 internally."""
+    b, t, h, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, t)
+    while t % chunk:          # largest divisor of t not above the request
+        chunk -= 1
+    n = t // chunk
+    qc = q.reshape(b, n, chunk, h, dk).astype(jnp.float32)
+    kc = k.reshape(b, n, chunk, h, dk).astype(jnp.float32)
+    vc = v.reshape(b, n, chunk, h, dv).astype(jnp.float32)
+    la = log_a.reshape(b, n, chunk, h).astype(jnp.float32)
+
+    cum = jnp.cumsum(la, axis=2)                     # [B,n,L,H] inclusive
+    total = cum[:, :, -1]                            # [B,n,H]
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    @jax.checkpoint
+    def body(s, xs):
+        # checkpointed: AD through the chunk scan then saves only the [B,H,
+        # dk,dv] carry per chunk and recomputes the [L,L] scores in bwd
+        # (otherwise residuals would be O(T*L) per layer).
+        qi, ki, vi, cumi, toti = xs                  # [B,L,H,*], [B,L,H], [B,H]
+        # inter-chunk: y_inter_t = (q_t * exp(cum_t)) . S_prev
+        q_dec = qi * jnp.exp(cumi)[..., None]
+        y_inter = _einsum("blhk,bhkv->blhv", q_dec, s)
+        # intra-chunk: scores[t,s] = q_t.k_s * exp(cum_t - cum_s), t >= s
+        scores = _einsum("blhk,bmhk->bhlm", qi, ki)
+        decay = cumi[:, :, None, :] - cumi[:, None, :, :]     # [B,l,m,H]
+        decay = jnp.moveaxis(decay, -1, 1)                    # [B,H,l,m]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        scores = jnp.where(mask, scores * jnp.exp(decay), 0.0)
+        y_intra = _einsum("bhlm,bmhv->blhv", scores, vi)
+        # state update: S = exp(total) S + sum_s exp(total - cum_s) k_s v_s^T
+        k_dec = ki * jnp.exp(toti[:, None] - cumi)[..., None]
+        s_new = s * jnp.exp(toti)[..., None, None] + _einsum(
+            "blhk,blhv->bhkv", k_dec, vi)
+        return s_new, y_inter + y_intra
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (qc, kc, vc, cum, total))
+    final, y = jax.lax.scan(body, init_state, xs)
+    y = jnp.moveaxis(y, 0, 1).reshape(b, t, h, dv)
+    return y, final
+
+
+def ssd_decode_step(q, k, v, log_a, state):
+    """One-token recurrence. q/k [B,H,dk], v [B,H,dv], log_a [B,H],
+    state [B,H,dk,dv] -> (y [B,H,dv], new_state)."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    state = state * a + _einsum(
+        "bhk,bhv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32))
+    y = _einsum("bhk,bhkv->bhv", q.astype(jnp.float32), state)
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# Mamba mixer (SSD / mamba-2 style: scalar-per-head decay, MXU-friendly).
+# DESIGN.md records this as the TPU adaptation of the paper's mamba baseline.
+# ---------------------------------------------------------------------------
+
+class Mamba:
+    HEAD_DIM = 64
+
+    def dims(self, cfg: ModelConfig):
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        n_heads = d_in // self.HEAD_DIM
+        return d_in, n_heads, s.d_state
+
+    def specs(self, cfg: ModelConfig) -> Dict[str, Spec]:
+        d = cfg.d_model
+        d_in, h, n = self.dims(cfg)
+        s = cfg.ssm
+        dt = dtype_of(cfg)
+        return {
+            "in_proj": Spec((d, 2 * d_in), ("embed", "ssm_inner"), dt, fan_in=d),
+            "conv_w": Spec((s.d_conv, d_in), ("conv", "ssm_inner"), dt, "small_normal"),
+            "bc_proj": Spec((d, 2 * n), ("embed", None), dt, fan_in=d),
+            "dt_proj": Spec((d, h), ("embed", "heads"), dt, fan_in=d),
+            "dt_bias": Spec((h,), ("heads",), jnp.float32, "zeros"),
+            "a_log": Spec((h,), ("heads",), jnp.float32, "zeros"),
+            "d_skip": Spec((h,), ("heads",), jnp.float32, "ones"),
+            "out_proj": Spec((d_in, d), ("ssm_inner", "embed"), dt, fan_in=d_in),
+        }
+
+    def init_state(self, cfg: ModelConfig, batch: int, _max_context: int):
+        d_in, h, n = self.dims(cfg)
+        s = cfg.ssm
+        return {
+            "ssm": Spec((batch, h, n, self.HEAD_DIM),
+                        ("batch", None, None, None), jnp.float32, "zeros"),
+            "conv": Spec((batch, s.d_conv - 1, d_in),
+                         ("batch", None, "ssm_inner"), dtype_of(cfg), "zeros"),
+        }
+
+    def _proj_gates(self, p, x):
+        d_in = p["out_proj"].shape[0]
+        xz = _einsum("...d,de->...e", x, p["in_proj"]).astype(x.dtype)
+        return xz[..., :d_in], xz[..., d_in:]
+
+    def fwd_seq(self, p, x, ctx, cfg: ModelConfig):
+        b, t, _ = x.shape
+        d_in, h, n = self.dims(cfg)
+        s = cfg.ssm
+        xi, z = self._proj_gates(p, x)
+        # causal depthwise conv over time
+        conv_tail = xi[:, -(s.d_conv - 1):, :]
+        xpad = jnp.pad(xi, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+        xc = sum(
+            xpad[:, i:i + t, :] * p["conv_w"][i][None, None, :]
+            for i in range(s.d_conv))
+        xc = jax.nn.silu(xc)
+        bc = _einsum("btd,dn->btn", x, p["bc_proj"]).astype(x.dtype)
+        b_mat, c_mat = bc[..., :n], bc[..., n:]
+        dt = jax.nn.softplus(
+            _einsum("btd,dh->bth", x, p["dt_proj"]) + p["dt_bias"])
+        a = -jnp.exp(p["a_log"])                                   # [h] < 0
+        log_a = dt * a                                             # [b,t,h]
+        xh = xc.reshape(b, t, h, self.HEAD_DIM)
+        v = xh * dt[..., None]
+        q = jnp.broadcast_to(c_mat[:, :, None, :], (b, t, h, n))
+        k = jnp.broadcast_to(b_mat[:, :, None, :], (b, t, h, n))
+        y, final = ssd_chunked(q, k, v, log_a, s.chunk_size)
+        y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+        y = y.reshape(b, t, d_in).astype(x.dtype) * jax.nn.silu(z)
+        out = _einsum("bte,ed->btd", y, p["out_proj"]).astype(x.dtype)
+        return out, {"ssm": final, "conv": conv_tail}
+
+    def fwd_dec(self, p, x, state, shared, cfg: ModelConfig):
+        bsz = x.shape[0]
+        d_in, h, n = self.dims(cfg)
+        s = cfg.ssm
+        xi, z = self._proj_gates(p, x)                 # [B, d_in]
+        window = jnp.concatenate([state["conv"], xi[:, None, :]], axis=1)
+        xc = _einsum("bcd,cd->bd", window, p["conv_w"]).astype(x.dtype)
+        xc = jax.nn.silu(xc)
+        bc = _einsum("bd,dn->bn", x, p["bc_proj"]).astype(x.dtype)
+        b_mat, c_mat = bc[..., :n], bc[..., n:]
+        dt = jax.nn.softplus(_einsum("bd,dh->bh", x, p["dt_proj"]) + p["dt_bias"])
+        log_a = dt * (-jnp.exp(p["a_log"]))
+        xh = xc.reshape(bsz, h, self.HEAD_DIM)
+        v = xh * dt[..., None]
+        q = jnp.broadcast_to(c_mat[:, None, :], (bsz, h, n))
+        k = jnp.broadcast_to(b_mat[:, None, :], (bsz, h, n))
+        y, new_ssm = ssd_decode_step(q, k, v, log_a, state["ssm"])
+        y = y + xh.astype(jnp.float32) * p["d_skip"][None, :, None]
+        y = y.reshape(bsz, d_in).astype(x.dtype) * jax.nn.silu(z)
+        out = _einsum("be,ed->bd", y, p["out_proj"]).astype(x.dtype)
+        return out, {"ssm": new_ssm, "conv": window[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM mixer (xLSTM matrix memory; sigmoid input gate for stability —
+# documented simplification of the exponential gate).
+#   C_t = f_t C + i_t v k^T ; n_t = f_t n + i_t k ; h = C q / max(|n.q|, 1)
+# Implemented on the shared SSD primitive with v augmented by a ones column
+# (the normalizer is just one extra value channel).
+# ---------------------------------------------------------------------------
+
+class MLSTM:
+    def specs(self, cfg: ModelConfig) -> Dict[str, Spec]:
+        d, h, hd = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+        dt = dtype_of(cfg)
+        return {
+            "wq": Spec((d, h, hd), ("embed", "heads", "head_dim"), dt, fan_in=d),
+            "wk": Spec((d, h, hd), ("embed", "heads", "head_dim"), dt, fan_in=d),
+            "wv": Spec((d, h, hd), ("embed", "heads", "head_dim"), dt, fan_in=d),
+            "w_if": Spec((d, 2, h), ("embed", None, "heads"), jnp.float32, "small_normal", fan_in=d),
+            "b_if": Spec((2, h), (None, "heads"), jnp.float32, "zeros"),
+            "wo": Spec((h, hd, d), ("heads", "head_dim", "embed"), dt, fan_in=d),
+        }
+
+    def init_state(self, cfg: ModelConfig, batch: int, _max_context: int):
+        h, hd = cfg.num_heads, cfg.resolved_head_dim
+        return {
+            "c": Spec((batch, h, hd, hd + 1),
+                      ("batch", None, None, None), jnp.float32, "zeros"),
+        }
+
+    def _gates(self, p, x):
+        gf = _einsum("...d,dgh->...gh", x, p["w_if"]) + p["b_if"]
+        i_gate = jax.nn.sigmoid(gf[..., 0, :])
+        log_f = jax.nn.log_sigmoid(gf[..., 1, :])
+        return i_gate, log_f
+
+    def _qkv(self, p, x, cfg):
+        hd = cfg.resolved_head_dim
+        q = _einsum("...d,dhk->...hk", x, p["wq"]).astype(x.dtype) * (hd ** -0.5)
+        k = _einsum("...d,dhk->...hk", x, p["wk"]).astype(x.dtype) * (hd ** -0.25)
+        v = _einsum("...d,dhk->...hk", x, p["wv"]).astype(x.dtype)
+        return q, k, v
+
+    @staticmethod
+    def _read(y):
+        """y [..., hd+1] -> normalized h (last channel = normalizer n.q)."""
+        num, den = y[..., :-1], y[..., -1:]
+        return num / jnp.maximum(jnp.abs(den), 1.0)
+
+    def fwd_seq(self, p, x, ctx, cfg: ModelConfig):
+        b, t, _ = x.shape
+        q, k, v = self._qkv(p, x, cfg)
+        i_gate, log_f = self._gates(p, x)              # [b,t,h]
+        v_aug = jnp.concatenate(
+            [v.astype(jnp.float32), jnp.ones(v.shape[:-1] + (1,), jnp.float32)],
+            axis=-1) * i_gate[..., None]
+        y, final = ssd_chunked(q, k, v_aug, log_f, cfg.ssm.chunk_size)
+        hh = self._read(y).astype(x.dtype)
+        out = _einsum("bthk,hkd->btd", hh, p["wo"]).astype(x.dtype)
+        return out, {"c": final}
+
+    def fwd_dec(self, p, x, state, shared, cfg: ModelConfig):
+        q, k, v = self._qkv(p, x, cfg)
+        i_gate, log_f = self._gates(p, x)              # [b,h]
+        v_aug = jnp.concatenate(
+            [v.astype(jnp.float32), jnp.ones(v.shape[:-1] + (1,), jnp.float32)],
+            axis=-1) * i_gate[..., None]
+        y, new_c = ssd_decode_step(q, k, v_aug, log_f, state["c"])
+        hh = self._read(y).astype(x.dtype)
+        out = _einsum("bhk,hkd->bd", hh, p["wo"]).astype(x.dtype)
+        return out, {"c": new_c}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, per-head block-diagonal recurrence). Strictly
+# sequential -> lax.scan over time; this is inherent to sLSTM.
+# ---------------------------------------------------------------------------
+
+class SLSTM:
+    def specs(self, cfg: ModelConfig) -> Dict[str, Spec]:
+        d, h, hd = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+        dt = jnp.float32  # recurrent cell in fp32
+        return {
+            "w": Spec((d, 4, h, hd), ("embed", None, "heads", "head_dim"), dt, fan_in=d),
+            "r": Spec((h, 4, hd, hd), ("heads", None, "head_dim", None), dt, "small_normal", fan_in=hd),
+            "b": Spec((4, h, hd), (None, "heads", "head_dim"), dt, "zeros"),
+            "wo": Spec((h, hd, d), ("heads", "head_dim", "embed"), dtype_of(cfg), fan_in=d),
+        }
+
+    def init_state(self, cfg: ModelConfig, batch: int, _max_context: int):
+        h, hd = cfg.num_heads, cfg.resolved_head_dim
+        z = lambda: Spec((batch, h, hd), ("batch", "heads", None), jnp.float32, "zeros")
+        return {"c": z(), "n": z(), "h": z()}
+
+    @staticmethod
+    def _cell(p, wx, state):
+        """wx [B,4,H,hd] pre-activations; state {c,n,h}."""
+        rec = _einsum("bhk,hgkl->bghl", state["h"], p["r"])
+        za = wx + rec + p["b"][None]
+        z = jnp.tanh(za[:, 0])
+        i = jax.nn.sigmoid(za[:, 1])
+        f = jax.nn.sigmoid(za[:, 2])
+        o = jax.nn.sigmoid(za[:, 3])
+        c = f * state["c"] + i * z
+        n = f * state["n"] + i
+        h = o * c / jnp.maximum(jnp.abs(n), 1.0)
+        return {"c": c, "n": n, "h": h}
+
+    TIME_CHUNK = 64
+
+    def fwd_seq(self, p, x, ctx, cfg: ModelConfig):
+        b, t, _ = x.shape
+        wx = _einsum("btd,dghk->btghk", x, p["w"])     # [b,t,4,h,hd]
+        h_, hd_ = cfg.num_heads, cfg.resolved_head_dim
+        zeros = jnp.zeros((b, h_, hd_), jnp.float32)
+        state = {"c": zeros, "n": zeros, "h": zeros}
+
+        def step(s, wxt):
+            s2 = self._cell(p, wxt, s)
+            return s2, s2["h"]
+
+        ck = self.TIME_CHUNK
+        while t % ck:
+            ck -= 1
+
+        @jax.checkpoint
+        def chunk_body(s, wxc):
+            # checkpointed: AD saves only the (c, n, h) carry per chunk and
+            # recomputes the per-step residuals in backward — without this,
+            # differentiating the T-step scan stores O(T) step residuals
+            # (~50 GiB/layer at 4k tokens; EXPERIMENTS.md §Perf iter. 4).
+            return jax.lax.scan(step, s, wxc)
+
+        wxc = jnp.moveaxis(wx, 1, 0).reshape(
+            (t // ck, ck) + wx.shape[:1] + wx.shape[2:])
+        state, hs = jax.lax.scan(chunk_body, state, wxc)
+        hs = hs.reshape((t,) + hs.shape[2:])
+        hs = jnp.moveaxis(hs, 0, 1).astype(x.dtype)    # [b,t,h,hd]
+        out = _einsum("bthk,hkd->btd", hs, p["wo"]).astype(x.dtype)
+        return out, state
+
+    def fwd_dec(self, p, x, state, shared, cfg: ModelConfig):
+        wx = _einsum("bd,dghk->bghk", x, p["w"])
+        s2 = self._cell(p, wx, state)
+        out = _einsum("bhk,hkd->bd", s2["h"].astype(x.dtype), p["wo"]).astype(x.dtype)
+        return out, s2

@@ -1,0 +1,91 @@
+"""Parameter-spec system: one tree of ``Spec`` drives init, abstract
+(ShapeDtypeStruct) instantiation for the dry-run, and sharding resolution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import ShardingRules, sharding_for
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    """Declarative parameter: shape + logical axes + init."""
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"          # normal | zeros | ones | small_normal
+    fan_in: int = 0               # for scaled init; 0 -> shape[0] heuristic
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+    def materialize(self, key) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "neg_ones":
+            return jnp.full(self.shape, -1, self.dtype)
+        fan = self.fan_in or (self.shape[-2] if len(self.shape) >= 2 else self.shape[-1])
+        scale = 1.0 / math.sqrt(max(fan, 1))
+        if self.init == "small_normal":
+            scale *= 0.1
+        x = jax.random.normal(key, self.shape, jnp.float32) * scale
+        return x.astype(self.dtype)
+
+    def abstract(self, mesh=None, rules=None, memory_kind=None) -> jax.ShapeDtypeStruct:
+        if mesh is None:
+            return jax.ShapeDtypeStruct(self.shape, self.dtype)
+        sh = sharding_for(self.logical, self.shape, mesh, rules, memory_kind)
+        return jax.ShapeDtypeStruct(self.shape, self.dtype, sharding=sh)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def tree_init(specs, key) -> Any:
+    """Materialize a Spec tree into a param pytree (deterministic key split)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [s.materialize(k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def tree_abstract(specs, mesh=None, rules=None, memory_kind=None) -> Any:
+    return jax.tree.map(
+        lambda s: s.abstract(mesh, rules, memory_kind), specs, is_leaf=is_spec)
+
+
+def tree_shardings(specs, mesh, rules=None, memory_kind=None) -> Any:
+    return jax.tree.map(
+        lambda s: sharding_for(s.logical, s.shape, mesh, rules, memory_kind),
+        specs, is_leaf=is_spec)
+
+
+def tree_bytes(specs) -> int:
+    return sum(
+        int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+        for s in jax.tree.leaves(specs, is_leaf=is_spec))
+
+
+def tree_param_count(specs) -> int:
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(specs, is_leaf=is_spec))
+
+
+def stack_specs(spec_tree, n: int, stack_logical: str = "stack"):
+    """Prepend a stacked-layer dim of size n to every Spec in a tree."""
+    def f(s: Spec) -> Spec:
+        return Spec((n,) + s.shape, (stack_logical,) + s.logical, s.dtype, s.init, s.fan_in)
+    return jax.tree.map(f, spec_tree, is_leaf=is_spec)
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)

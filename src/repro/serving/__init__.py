@@ -1,0 +1,4 @@
+from repro.serving.engine import ServingEngine, TenantConfig
+from repro.serving.request import Request, ServingMetrics
+from repro.serving.hw import HardwareSpec, TPU_V5E, TPU_V5E_PCIE, GH200, SPECS
+from repro.serving.perf_model import PerfModel

@@ -1,0 +1,468 @@
+"""Multi-tenant serving engine: continuous batching + MIRAGE integration.
+
+This is the *functional* runtime (it really executes the models — on CPU
+with reduced configs in tests, on TPU unchanged): slot-based continuous
+batching per tenant, a shared paged-KV control plane (`PagedKVAllocator`),
+and per-iteration Remapping Controller hooks (Algorithm 1). Three memory
+modes, matching the paper's comparison:
+
+  * ``mirage`` — KV exhaustion grows the pool from remapped parameter
+    memory; decode fetches cycling layers through the Transfer Engine.
+  * ``vllm``   — fixed pool; exhaustion preempts the youngest running
+    request and recomputes it later (PagedAttention recompute baseline).
+  * ``swap``   — Pie-style: pool extends into host memory (functionally a
+    growth; the bidirectional-transfer cost is charged by the simulator).
+
+Timing is *not* measured here (CPU wall-time is meaningless for GH200/TPU
+claims): the engine records per-token *step indices* and event counts; the
+event-driven simulator (serving/simulator.py) owns latency/throughput.
+Output-equivalence of mirage vs vllm modes is what the integration tests
+assert — remapping must never change results.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RuntimeConfig
+from repro.core import (
+    ControllerConfig, MetadataStore, MemoryInfo, ModelInfo,
+    PagedKVAllocator, RemapDecision, RemappingController, TransferEngine,
+)
+from repro.models import build_model
+from repro.models.common import tree_bytes
+from repro.serving.hw import HardwareSpec, TPU_V5E
+from repro.serving.perf_model import PerfModel
+from repro.serving.request import Request, ServingMetrics
+from repro.serving.scheduler import make_scheduler
+
+
+@dataclasses.dataclass
+class TenantConfig:
+    cfg: ModelConfig
+    params: Any
+    max_batch: int = 8
+    max_context: int = 64
+    priority: int = 0
+    # paged=True: decode reads the elastic paged KV pool through
+    # kernels/paged_attention (attention-stack archs only). Pool pages map
+    # 1:1 to allocator page ids; a remap tier switch that grows the
+    # allocator grows the pool (the donated-memory segments become pages).
+    paged: bool = False
+
+
+class Tenant:
+    """Runtime state for one hosted model."""
+
+    def __init__(self, name: str, tc: TenantConfig, hw: HardwareSpec):
+        self.name = name
+        self.cfg = tc.cfg
+        self.model = build_model(tc.cfg)
+        self.params = tc.params
+        self.max_batch = tc.max_batch
+        self.max_context = tc.max_context
+        self.perf = PerfModel(tc.cfg, hw)
+        self.queue: deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * tc.max_batch
+        self.paged = tc.paged
+        self.state = None if tc.paged else \
+            self.model.init_decode_state(tc.max_batch, tc.max_context)
+        self._decode_jit: Dict[Tuple[int, ...], Any] = {}
+        self._prefill_jit = None
+
+    def init_paged_state(self, total_pages: int, page_size: int):
+        """Pool covers every allocator page id + one scratch page (used by
+        empty batch slots so their writes never touch live pages)."""
+        import jax.numpy as jnp
+        cfg = self.cfg
+        hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        r = self.model.repeats
+        n = -(-self.max_context // page_size)
+        dt = jnp.dtype(cfg.dtype)
+        scratch = total_pages
+        self.state = {
+            "pool_k": jnp.zeros((r, total_pages + 1, page_size, hkv, hd), dt),
+            "pool_v": jnp.zeros((r, total_pages + 1, page_size, hkv, hd), dt),
+            "page_table": jnp.full((self.max_batch, n), scratch, jnp.int32),
+            "ctx": jnp.zeros((self.max_batch,), jnp.int32),
+        }
+
+    def grow_pool(self, new_total_pages: int):
+        import jax.numpy as jnp
+        cur = self.state["pool_k"].shape[1] - 1
+        add = new_total_pages - cur
+        if add <= 0:
+            return
+        # scratch page stays last: insert new pages before it
+        def grow(pool):
+            body, scratch = pool[:, :-1], pool[:, -1:]
+            pad = jnp.zeros((pool.shape[0], add) + pool.shape[2:], pool.dtype)
+            return jnp.concatenate([body, pad, scratch], axis=1)
+        # scratch index moves: rewrite empty-slot table entries
+        old_scratch, new_scratch = cur, new_total_pages
+        pt = self.state["page_table"]
+        pt = jnp.where(pt == old_scratch, new_scratch, pt)
+        self.state = dict(
+            self.state, pool_k=grow(self.state["pool_k"]),
+            pool_v=grow(self.state["pool_v"]), page_table=pt)
+
+    # ------------------------------------------------------------- batching
+    def free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slots):
+            if r is None:
+                return i
+        return None
+
+    def running(self) -> List[Request]:
+        return [r for r in self.slots if r is not None]
+
+    def write_slot_state(self, slot: int, new_state) -> None:
+        """Insert a prefill result (batch=1 state) into batch slot."""
+        self.state = self.model.insert_slot(self.state, slot, new_state)
+
+    def clear_slot(self, slot: int) -> None:
+        self.slots[slot] = None
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        tenants: Dict[str, TenantConfig],
+        *,
+        mode: str = "mirage",                      # mirage | vllm | swap
+        scheduler: str = "temporal",
+        hw: HardwareSpec = TPU_V5E,
+        base_kv_pages: int = 64,
+        page_size: int = 16,
+        runtime: RuntimeConfig = RuntimeConfig(),
+        quantum_steps: int = 8,
+    ):
+        assert mode in ("mirage", "vllm", "swap")
+        self.mode = mode
+        self.hw = hw
+        self.runtime = runtime
+        self.tenants = {n: Tenant(n, tc, hw) for n, tc in tenants.items()}
+        self.allocator = PagedKVAllocator(base_kv_pages, page_size)
+        self.store = MetadataStore(MemoryInfo(
+            hbm_bytes=hw.hbm_bytes, page_bytes=page_size * 1024,
+            base_kv_pages=base_kv_pages))
+        self.xfer = TransferEngine()
+        for n, t in self.tenants.items():
+            unit_bytes = max(tree_bytes(
+                t.model.specs()["blocks"]) // t.model.repeats, 1)
+            self.store.register(ModelInfo(
+                name=n, num_layers=t.model.repeats, layer_bytes=unit_bytes,
+                priority=tenants[n].priority,
+                max_remap_fraction=runtime.max_remap_fraction))
+            self.xfer.register(n, t.params["blocks"], unit_bytes)
+        self.controller = RemappingController(
+            self.store,
+            ControllerConfig(
+                victim_policy=runtime.victim_policy,
+                double_buffer=runtime.double_buffer,
+                dynamic_reversion=runtime.dynamic_reversion,
+                reversion_hysteresis=runtime.reversion_hysteresis,
+            ),
+            {n: t.perf.t_transfer_unit for n, t in self.tenants.items()},
+        )
+        self.scheduler = make_scheduler(
+            scheduler, list(self.tenants), quantum_steps=quantum_steps) \
+            if scheduler == "temporal" else make_scheduler(scheduler, list(self.tenants))
+        self.step_idx = 0
+        self.finished: List[Request] = []
+        self.events: List[Tuple[int, str, str]] = []   # (step, kind, detail)
+        self._elastic_pages: Dict[str, int] = {n: 0 for n in self.tenants}
+        for t in self.tenants.values():
+            if t.paged:
+                from repro.models.lm import layer_defs
+                assert all(ld.mixer == "attn" for ld in
+                           layer_defs(t.cfg)), \
+                    f"paged mode needs an attention stack: {t.name}"
+                t.init_paged_state(self.allocator.total_pages, page_size)
+
+    # ------------------------------------------------------------------ API
+    def submit(self, reqs: List[Request]) -> None:
+        self._incoming = deque(sorted(reqs, key=lambda r: r.arrival))
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        while self.step_idx < max_steps and (
+                self._incoming or any(
+                    t.queue or t.running() for t in self.tenants.values())):
+            self.step()
+        return self.finished
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> None:
+        self.step_idx += 1
+        now = float(self.step_idx)
+        # 1. admit arrivals (functional time: step index)
+        while self._incoming and self._incoming[0].arrival <= now:
+            r = self._incoming.popleft()
+            self.tenants[r.model].queue.append(r)
+        # 2. schedule
+        pending = {n: len(t.queue) for n, t in self.tenants.items()}
+        running = {n: len(t.running()) for n, t in self.tenants.items()}
+        active = self.scheduler.schedule(pending, running, now)
+        self.store.mark_active(active)
+        self.store.note_kv_usage(self.allocator.used_pages)
+        # 3. per active tenant: admit prefills, then decode one token
+        pressure = False
+        for name in active:
+            pressure |= self._admit(self.tenants[name])
+        for name in active:
+            pressure |= self._decode(self.tenants[name])
+        # 4. MIRAGE / baseline memory management
+        self._memory_control(pressure)
+
+    # ------------------------------------------------------------- internals
+    def _t_compute(self) -> Dict[str, float]:
+        out = {}
+        for n, t in self.tenants.items():
+            batch = max(len(t.running()), 1)
+            info = self.store.models[n]
+            if info.active:
+                out[n] = t.perf.decode_step_time(batch, t.max_context / 2) \
+                    / t.model.repeats
+            else:
+                out[n] = t.perf.prefill_time(512) / t.model.repeats
+        return out
+
+    def _memory_control(self, pressure: bool) -> None:
+        if self.mode == "vllm":
+            return  # recompute handled at allocation sites
+        if self.mode == "swap":
+            if pressure:
+                seg = self.allocator.grow(16, "host-swap")
+                self.events.append((self.step_idx, "swap-grow", f"{seg.num_pages}"))
+            return
+        decisions = self.controller.step(
+            kv_pressure=pressure, t_compute=self._t_compute())
+        for d in decisions:
+            self._apply_decision(d)
+
+    def _apply_decision(self, d: RemapDecision) -> None:
+        info = self.store.models[d.model]
+        target_pages = d.new_alpha * (
+            info.layer_bytes // self.store.memory.page_bytes)
+        cur = self._elastic_pages[d.model]
+        if target_pages > cur:
+            self.allocator.grow(target_pages - cur, d.model)
+            self._elastic_pages[d.model] = target_pages
+            self.xfer.apply_plan(d.model, d.plan)
+            for t in self.tenants.values():     # donated memory becomes pages
+                if t.paged:
+                    t.grow_pool(self.allocator.total_pages)
+            self.events.append(
+                (self.step_idx, "remap", f"{d.model} a={d.new_alpha}"))
+        elif target_pages < cur:
+            released = self.allocator.shrink(d.model)
+            if released < cur - target_pages:
+                # pages still in use: undo the reversion (retry later)
+                self.store.apply_remap(d.model, d.new_alpha + 1)
+                if released:
+                    self.allocator.grow(released, d.model)
+                return
+            self._elastic_pages[d.model] = cur - released
+            self.xfer.apply_plan(d.model, d.plan)
+            self.events.append(
+                (self.step_idx, "revert", f"{d.model} a={d.new_alpha}"))
+
+    # -------------------------------------------------------------- prefill
+    def _admit(self, t: Tenant) -> bool:
+        pressure = False
+        while t.queue:
+            r = t.queue[0]
+            slot = t.free_slot()
+            if slot is None:
+                break
+            # vLLM-style admission watermark: keep one page of headroom per
+            # running request so decode can always progress (no admission
+            # thrash); applies to every mode.
+            reserve = sum(len(x.running()) for x in self.tenants.values())
+            need = self.allocator.pages_needed(r.prompt_len + 1) + reserve
+            if need > self.allocator.free_pages:
+                pressure = True
+                break
+            assert self.allocator.allocate(r.rid, r.prompt_len + 1) is not None
+            t.queue.popleft()
+            self._prefill(t, r, slot)
+        return pressure
+
+    def _prefill(self, t: Tenant, r: Request, slot: int) -> None:
+        prompt = jnp.asarray(r.prompt[None, :])
+        batch = {"tokens": prompt}
+        if t.cfg.is_encoder_decoder:
+            rng = np.random.default_rng(abs(hash(r.rid)) % (2**31))
+            frames = rng.standard_normal(
+                (1, min(t.cfg.max_source_len, 32), t.cfg.d_model)) * 0.02
+            batch["frames"] = jnp.asarray(frames, jnp.float32)
+        if t.cfg.num_image_patches:
+            rng = np.random.default_rng(abs(hash(r.rid)) % (2**31))
+            batch["patch_embeds"] = jnp.asarray(rng.standard_normal(
+                (1, t.cfg.num_image_patches, t.cfg.d_model)) * 0.02, jnp.float32)
+        if t.paged:
+            logits = self._prefill_paged(t, r, slot, batch)
+        else:
+            logits, state1 = t.model.prefill(t.params, batch, t.max_context)
+        tok = int(jnp.argmax(logits[0]))
+        t.slots[slot] = r
+        r.slot = slot
+        if not t.paged:
+            t.write_slot_state(slot, state1)
+        r.generated.append(tok)
+        r.t_first_token = float(self.step_idx)
+        r.token_times.append(float(self.step_idx))
+        self.events.append((self.step_idx, "prefill", r.rid))
+
+    def _prefill_paged(self, t: Tenant, r: Request, slot: int, batch):
+        """Prefill and scatter the KV into this request's allocator pages."""
+        lm = t.model.impl
+        prompt = batch["tokens"]
+        x = lm.embed(t.params, prompt, batch.get("patch_embeds"))
+        b, s = prompt.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        xo, _, caches = lm.fwd_seq(t.params, x, {"positions": positions},
+                                   collect_cache=True)
+        logits = lm.logits_last(t.params, xo[:, -1])
+        pages = self.allocator.seq_pages[r.rid]
+        page_size = self.allocator.page_size
+        n = t.state["page_table"].shape[1]
+        pt_row = np.full((n,), t.state["pool_k"].shape[1] - 1, np.int32)
+        pt_row[:len(pages)] = pages
+        st1 = lm.paged_state_from_prefill(
+            caches, jnp.full((1,), s, jnp.int32), jnp.asarray(pt_row[None]),
+            t.state["pool_k"].shape[1], page_size,
+            pool_k=t.state["pool_k"], pool_v=t.state["pool_v"])
+        t.state = dict(
+            t.state,
+            pool_k=st1["pool_k"], pool_v=st1["pool_v"],
+            page_table=t.state["page_table"].at[slot].set(jnp.asarray(pt_row)),
+            ctx=t.state["ctx"].at[slot].set(s),
+        )
+        return logits
+
+    # --------------------------------------------------------------- decode
+    def _decode(self, t: Tenant) -> bool:
+        reqs = t.running()
+        if not reqs:
+            return False
+        pressure = False
+        # page for the next token of every running request
+        for r in reqs:
+            if self.allocator.allocate(r.rid, 1) is None:
+                pressure = True
+                if self.mode == "vllm":
+                    if self._preempt_one(exclude=r.rid) and \
+                            self.allocator.allocate(r.rid, 1) is not None:
+                        pressure = False
+                        continue
+                    self._preempt(r)  # could not make room: preempt r itself
+                else:
+                    # mirage/swap: grow synchronously then retry once
+                    self._memory_control(True)
+                    if self.allocator.allocate(r.rid, 1) is not None:
+                        continue
+                    self._preempt(r)
+        reqs = t.running()
+        if not reqs:
+            return pressure
+        tokens = np.zeros((t.max_batch,), np.int32)
+        for r in reqs:
+            tokens[r.slot] = r.generated[-1]
+        if t.paged:
+            # per-token page allocations land in the allocator; sync the
+            # running slots' page-table rows before the step
+            scratch = t.state["pool_k"].shape[1] - 1
+            pt = np.asarray(t.state["page_table"]).copy()
+            for r in reqs:
+                pages = self.allocator.seq_pages[r.rid]
+                row = np.full((pt.shape[1],), scratch, np.int32)
+                row[:len(pages)] = pages
+                pt[r.slot] = row
+            t.state = dict(t.state, page_table=jnp.asarray(pt))
+        remapped = self.store.models[t.name].remapped_alpha > 0
+        if remapped:
+            resident, cycle, maps = self.xfer.split[t.name]
+            logits, t.state = self._decode_fn(t, remapped=True)(
+                t.params, resident, cycle, maps, t.state, jnp.asarray(tokens))
+            self.xfer.note_decode_step(t.name)
+        else:
+            logits, t.state = self._decode_fn(t)(
+                t.params, t.state, jnp.asarray(tokens))
+        choices = np.asarray(jnp.argmax(logits, axis=-1))
+        for r in list(reqs):
+            r.generated.append(int(choices[r.slot]))
+            r.token_times.append(float(self.step_idx))
+            if len(r.generated) >= r.max_new_tokens or \
+                    r.total_len >= t.max_context - 1:
+                self._finish(t, r)
+        return pressure
+
+    def _decode_fn(self, t: Tenant, remapped: bool = False):
+        """jit cache keyed by split shapes; param stacks are jit *arguments*
+        (never closure constants) so one executable serves every plan with
+        the same (resident, cycle) sizes."""
+        plan = self.xfer.plans[t.name]
+        key = (len(plan.resident_layers) if remapped else t.model.repeats,
+               len(plan.cycle_layers) if remapped else 0, t.paged)
+        if key not in t._decode_jit:
+            if remapped:
+                from repro.core.transfer_engine import make_fetch
+
+                def fn(params, resident, cycle, maps, state, tokens):
+                    fetch = make_fetch(resident, cycle, maps)
+                    if t.paged:
+                        return t.model.impl.decode_step_paged(
+                            params, state, tokens, fetch=fetch)
+                    return t.model.decode_step(
+                        params, state, tokens, t.max_context, fetch=fetch)
+            else:
+                def fn(params, state, tokens):
+                    if t.paged:
+                        return t.model.impl.decode_step_paged(
+                            params, state, tokens)
+                    return t.model.decode_step(
+                        params, state, tokens, t.max_context)
+            t._decode_jit[key] = jax.jit(fn)
+        return t._decode_jit[key]
+
+    # ------------------------------------------------------------ preemption
+    def _preempt_one(self, exclude: str = "") -> bool:
+        """vLLM recompute baseline: evict the youngest running request."""
+        cands = [(r, t) for t in self.tenants.values() for r in t.running()
+                 if r.rid != exclude]
+        if not cands:
+            return False
+        r, t = max(cands, key=lambda rt: rt[0].arrival)
+        self._preempt(r)
+        return True
+
+    def _preempt(self, r: Request) -> None:
+        t = self.tenants[r.model]
+        self.allocator.free(r.rid)
+        t.clear_slot(r.slot)
+        r.preemptions += 1
+        # recompute: prompt + generated becomes the new prompt
+        r.prompt = np.concatenate(
+            [r.prompt, np.asarray(r.generated, np.int32)])
+        r.generated = []
+        r.slot = -1
+        t.queue.appendleft(r)
+        self.events.append((self.step_idx, "preempt", r.rid))
+
+    def _finish(self, t: Tenant, r: Request) -> None:
+        self.allocator.free(r.rid)
+        t.clear_slot(r.slot)
+        r.finished = True
+        self.finished.append(r)
+        self.events.append((self.step_idx, "finish", r.rid))
+
+    # ---------------------------------------------------------------- report
+    def metrics(self) -> ServingMetrics:
+        return ServingMetrics.from_requests(
+            self.finished, makespan=float(self.step_idx))

@@ -1,0 +1,61 @@
+"""Hardware abstraction: chip + host-link constants.
+
+Roofline constants for the dry-run target (TPU v5e) are fixed per the
+assignment: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+The MIRAGE evaluation additionally needs a host link: the paper's point is
+that GH200-class CPU<->GPU bandwidth (450 GB/s) makes parameter streaming
+profitable while PCIe-class (64 GB/s) may not — we expose both as named
+specs so every benchmark reports the sensitivity.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    flops_bf16: float          # per chip
+    hbm_bw: float              # bytes/s
+    hbm_bytes: int
+    ici_bw: float              # bytes/s per link
+    host_link_bw: float        # host DRAM <-> HBM, bytes/s (unidirectional)
+    host_dram_bytes: int
+    # paper §3.2: 1:1 read/write mix degrades host-link bandwidth ~15%
+    bidir_degradation: float = 0.15
+    mfu_ceiling: float = 0.6   # realistic fraction of peak for dense matmul
+
+    @property
+    def host_link_bw_bidir(self) -> float:
+        return self.host_link_bw * (1.0 - self.bidir_degradation)
+
+
+# Dry-run/roofline target (assignment constants).
+TPU_V5E = HardwareSpec(
+    name="tpu_v5e",
+    flops_bf16=197e12,
+    hbm_bw=819e9,
+    hbm_bytes=16 * 2**30,
+    ici_bw=50e9,
+    host_link_bw=450e9,        # GH200-class host link (paper's premise)
+    host_dram_bytes=224 * 2**30,
+)
+
+# Same chip, PCIe-class host link (the paper's H100 contrast point).
+TPU_V5E_PCIE = dataclasses.replace(
+    TPU_V5E, name="tpu_v5e_pcie", host_link_bw=64e9)
+
+# GH200 numbers as used in the paper's own evaluation (for the simulator's
+# paper-faithful reproduction mode): H200 GPU-ish compute + 450 GB/s link.
+GH200 = HardwareSpec(
+    name="gh200",
+    flops_bf16=990e12,
+    hbm_bw=4.8e12,
+    hbm_bytes=96 * 2**30,
+    ici_bw=450e9,
+    host_link_bw=450e9,
+    host_dram_bytes=224 * 2**30,
+)
+
+SPECS = {s.name: s for s in (TPU_V5E, TPU_V5E_PCIE, GH200)}

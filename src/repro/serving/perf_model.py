@@ -1,0 +1,110 @@
+"""Analytic per-iteration performance model (Vidur-style).
+
+Used by (a) the Remapping Controller for its T_c / T_T feasibility inputs
+(paper §5.3 profiles these offline) and (b) the event-driven simulator for
+iteration timing. Single-accelerator model, matching the paper's single-GPU
+multi-tenant setup; the distributed dry-run path has its own roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+from repro.models.lm import block_pattern
+from repro.serving.hw import HardwareSpec
+
+
+def kv_bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    """KV-cache bytes appended per generated token (all layers)."""
+    per_attn = 2 * cfg.num_kv_heads * cfg.resolved_head_dim * dtype_bytes
+    n_attn = sum(1 for k in cfg.layer_kinds() if k.startswith("attn"))
+    if cfg.is_encoder_decoder:
+        n_attn = cfg.num_layers  # decoder self-attention
+    return per_attn * n_attn
+
+
+def const_state_bytes(cfg: ModelConfig, dtype_bytes: int = 4) -> int:
+    """O(1) per-sequence recurrent state (mamba / mLSTM)."""
+    total = 0
+    for kind in cfg.layer_kinds():
+        if kind.startswith("ssm"):
+            if cfg.ssm and cfg.ssm.kind == "mamba":
+                d_in = cfg.ssm.expand * cfg.d_model
+                total += (d_in // 64) * cfg.ssm.d_state * 64 * dtype_bytes
+                total += (cfg.ssm.d_conv - 1) * d_in * 2
+            else:
+                hd = cfg.resolved_head_dim
+                total += cfg.num_heads * hd * (hd + 1) * dtype_bytes
+    return total
+
+
+@dataclasses.dataclass
+class PerfModel:
+    cfg: ModelConfig
+    hw: HardwareSpec
+    dtype_bytes: int = 2
+
+    def __post_init__(self):
+        self.pattern, self.repeats = block_pattern(self.cfg)
+        self.param_bytes = self.cfg.param_count() * self.dtype_bytes
+        self.active_param_bytes = self.cfg.active_param_count() * self.dtype_bytes
+
+    # ------------------------------------------------------------ remap unit
+    @property
+    def unit_bytes(self) -> int:
+        """Bytes per remappable unit (one pattern repeat)."""
+        v = self.cfg.vocab_size * self.cfg.d_model * self.dtype_bytes
+        return max((self.param_bytes - 2 * v) // self.repeats, 1)
+
+    @property
+    def t_transfer_unit(self) -> float:
+        """Host->HBM time for one remap unit (unidirectional)."""
+        return self.unit_bytes / self.hw.host_link_bw
+
+    @property
+    def t_compute_layer_decode(self) -> float:
+        """Per-unit decode compute time at batch=1 (conservative T_c)."""
+        return self.decode_step_time(1, 512) / self.repeats
+
+    # ------------------------------------------------------------- decode/TBT
+    def decode_step_time(self, batch: int, avg_ctx: float,
+                         resident_fraction: float = 1.0,
+                         streamed_bytes: int = 0) -> float:
+        """One decode iteration for ``batch`` sequences.
+
+        Decode is bandwidth-bound: every resident parameter byte is read
+        once; KV cache bytes grow with batch*ctx. Compute term uses
+        2*active_params*batch FLOPs. ``streamed_bytes`` (MIRAGE cycling
+        layers) ride the host link concurrently; the iteration takes
+        max(compute, hbm, host-stream) — the pipeline overlaps them.
+        """
+        flops = 2.0 * (self.active_param_bytes / self.dtype_bytes) * batch
+        t_compute = flops / (self.hw.flops_bf16 * self.hw.mfu_ceiling)
+        kv = (kv_bytes_per_token(self.cfg, self.dtype_bytes) * avg_ctx
+              + const_state_bytes(self.cfg)) * batch
+        hbm = self.param_bytes * resident_fraction + kv
+        t_hbm = hbm / self.hw.hbm_bw
+        t_stream = streamed_bytes / self.hw.host_link_bw
+        return max(t_compute, t_hbm, t_stream)
+
+    # ------------------------------------------------------------ prefill/TTFT
+    def prefill_time(self, prompt_tokens: int, batch: int = 1) -> float:
+        flops = 2.0 * (self.active_param_bytes / self.dtype_bytes) \
+            * prompt_tokens * batch
+        # quadratic attention term
+        n_attn = sum(1 for k in self.cfg.layer_kinds() if k.startswith("attn"))
+        flops += (2.0 * n_attn * prompt_tokens ** 2 * self.cfg.num_heads
+                  * self.cfg.resolved_head_dim * 2 * batch)
+        t_compute = flops / (self.hw.flops_bf16 * self.hw.mfu_ceiling)
+        t_hbm = self.param_bytes / self.hw.hbm_bw
+        return max(t_compute, t_hbm)
+
+    # -------------------------------------------------------------- cold start
+    def reload_time(self, alpha_units: int) -> float:
+        return alpha_units * self.unit_bytes / self.hw.host_link_bw
+
+    def swap_step_time(self, swapped_bytes: int) -> float:
+        """Pie-style KV swap traffic for one iteration: bidirectional
+        transfers at degraded effective bandwidth (paper §3.2)."""
+        return 2.0 * swapped_bytes / self.hw.host_link_bw_bidir

@@ -1,0 +1,79 @@
+"""Serving request + lifecycle bookkeeping."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: str
+    model: str
+    prompt: np.ndarray                 # int32 tokens
+    max_new_tokens: int
+    arrival: float = 0.0
+    # runtime
+    slot: int = -1                     # decode batch slot (engine)
+    generated: List[int] = dataclasses.field(default_factory=list)
+    t_first_token: Optional[float] = None
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    finished: bool = False
+    preemptions: int = 0               # vLLM-baseline recompute evictions
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + len(self.generated)
+
+    def ttft(self) -> Optional[float]:
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.arrival
+
+    def tbts(self) -> List[float]:
+        ts = self.token_times
+        return [ts[i + 1] - ts[i] for i in range(len(ts) - 1)]
+
+
+def percentile(vals, p) -> float:
+    if not vals:
+        return float("nan")
+    return float(np.percentile(np.asarray(vals, np.float64), p))
+
+
+@dataclasses.dataclass
+class ServingMetrics:
+    p99_ttft: float
+    p99_tbt: float
+    p50_ttft: float
+    p50_tbt: float
+    throughput_tok_s: float
+    total_tokens: int
+    makespan: float
+    preemptions: int
+
+    @staticmethod
+    def from_requests(reqs: List[Request], makespan: float) -> "ServingMetrics":
+        ttfts = [r.ttft() for r in reqs if r.ttft() is not None]
+        tbts = [t for r in reqs for t in r.tbts()]
+        tokens = sum(len(r.generated) for r in reqs)
+        return ServingMetrics(
+            p99_ttft=percentile(ttfts, 99),
+            p99_tbt=percentile(tbts, 99),
+            p50_ttft=percentile(ttfts, 50),
+            p50_tbt=percentile(tbts, 50),
+            throughput_tok_s=tokens / makespan if makespan > 0 else float("nan"),
+            total_tokens=tokens,
+            makespan=makespan,
+            preemptions=sum(r.preemptions for r in reqs),
+        )
+
+    def row(self) -> str:
+        return (f"p99_ttft={self.p99_ttft:.4f} p99_tbt={self.p99_tbt:.5f} "
+                f"p50_tbt={self.p50_tbt:.5f} thru={self.throughput_tok_s:.1f} "
+                f"preempt={self.preemptions}")

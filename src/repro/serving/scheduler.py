@@ -1,0 +1,60 @@
+"""Multi-tenant GPU-sharing schedulers (paper §5.2).
+
+MIRAGE is scheduler-agnostic; we provide the two sharing modes the paper
+evaluates plus the round-robin default used when no priorities exist.
+``schedule()`` returns the models that run this iteration; everything else
+(victim ordering etc.) reads activity from the MetadataStore.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+
+class Scheduler:
+    def schedule(self, pending: Dict[str, int], running: Dict[str, int],
+                 now: float) -> List[str]:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class TemporalScheduler(Scheduler):
+    """One model owns the whole accelerator per quantum (round robin over
+    models with work). Suits multi-agent pipelines / idle-heavy tenants."""
+    models: Sequence[str]
+    quantum_steps: int = 32
+    _current: int = 0
+    _steps_left: int = 0
+
+    def schedule(self, pending, running, now) -> List[str]:
+        order = list(self.models)
+        busy = lambda m: pending.get(m, 0) + running.get(m, 0) > 0
+        if self._steps_left > 0 and busy(order[self._current]):
+            self._steps_left -= 1
+            return [order[self._current]]
+        # rotate to the next model with work
+        for k in range(1, len(order) + 1):
+            cand = (self._current + k) % len(order)
+            if busy(order[cand]):
+                self._current = cand
+                self._steps_left = self.quantum_steps - 1
+                return [order[cand]]
+        return []
+
+
+@dataclasses.dataclass
+class SpatialScheduler(Scheduler):
+    """All models run concurrently (MPS/MIG-like); each gets every step."""
+    models: Sequence[str]
+
+    def schedule(self, pending, running, now) -> List[str]:
+        return [m for m in self.models
+                if pending.get(m, 0) + running.get(m, 0) > 0]
+
+
+def make_scheduler(kind: str, models: Sequence[str], **kw) -> Scheduler:
+    if kind == "temporal":
+        return TemporalScheduler(models, **kw)
+    if kind == "spatial":
+        return SpatialScheduler(models)
+    raise ValueError(f"unknown scheduler {kind!r}")

@@ -1,0 +1,320 @@
+"""Event-driven (iteration-level) multi-tenant serving simulator.
+
+Reproduces the paper's GH200-scale evaluation on CPU: it drives the *real*
+control plane — ``MetadataStore``, ``RemappingController``, victim policies,
+layer-selection feasibility — with simulated time from the analytic
+``PerfModel`` (Vidur-style iteration timing). Memory is byte-accounted.
+
+Modes (paper baselines):
+  * mirage — parameter remapping: KV capacity grows by α·unit_bytes per
+    victim model; cycling-layer streaming rides the host link under compute
+    (charged as max(compute, stream)); Dynamic Reversion restores params.
+  * vllm   — fixed capacity; exhaustion preempts the youngest request and
+    recomputes it (every running request observes the stall).
+  * swap   — Pie-style KV swapping: capacity extends into host DRAM; the
+    overflow fraction of every touched KV byte crosses the host link
+    bidirectionally at degraded bandwidth (§3.2).
+
+The simulator is deliberately scheduler-agnostic and takes the same
+TemporalScheduler / SpatialScheduler objects as the functional engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import (
+    ControllerConfig, MemoryInfo, MetadataStore, ModelInfo,
+    RemappingController,
+)
+from repro.serving.hw import HardwareSpec, GH200
+from repro.serving.perf_model import PerfModel, kv_bytes_per_token
+from repro.serving.request import Request, ServingMetrics
+from repro.serving.scheduler import make_scheduler
+
+
+@dataclasses.dataclass
+class SimTenantConfig:
+    cfg: ModelConfig
+    max_batch: int = 64
+    mem_fraction: float = 0.35     # paper Table 1 GPU reservation
+
+
+class SimTenant:
+    def __init__(self, name: str, tc: SimTenantConfig, hw: HardwareSpec):
+        self.name = name
+        self.cfg = tc.cfg
+        self.perf = PerfModel(tc.cfg, hw)
+        self.max_batch = tc.max_batch
+        self.reserved_bytes = int(tc.mem_fraction * hw.hbm_bytes)
+        self.kv_capacity_base = max(
+            self.reserved_bytes - self.perf.param_bytes, 0)
+        self.queue: deque = deque()
+        self.running: List[Request] = []
+        self.kv_token_bytes = max(kv_bytes_per_token(tc.cfg), 1)
+        self.needs_reload = 0.0    # pending cold-start reload seconds
+
+    def kv_used(self) -> int:
+        return sum(r.total_len * self.kv_token_bytes for r in self.running)
+
+
+class Simulator:
+    def __init__(
+        self,
+        tenants: Dict[str, SimTenantConfig],
+        *,
+        mode: str = "mirage",
+        scheduler: str = "temporal",
+        hw: HardwareSpec = GH200,
+        quantum_steps: int = 32,
+        victim_policy: str = "mru",
+        double_buffer: bool = True,
+        buffer_mode: str = "dynamic",     # single (A) | double (B) | dynamic (C)
+        pipeline_cap: bool = True,
+        dynamic_reversion: bool = True,
+        max_remap_fraction: float = 0.5,
+        reversion_hysteresis: float = 0.3,
+        uniform_selection: bool = True,   # ablation: False = contiguous
+        seed: int = 0,
+    ):
+        assert mode in ("mirage", "vllm", "swap")
+        self.mode = mode
+        self.hw = hw
+        self.uniform_selection = uniform_selection
+        self.tenants = {n: SimTenant(n, tc, hw) for n, tc in tenants.items()}
+        page_bytes = 2 << 20
+        self.store = MetadataStore(MemoryInfo(
+            hbm_bytes=hw.hbm_bytes, page_bytes=page_bytes,
+            base_kv_pages=sum(t.kv_capacity_base for t in self.tenants.values())
+            // page_bytes))
+        for n, t in self.tenants.items():
+            self.store.register(ModelInfo(
+                name=n, num_layers=t.perf.repeats,
+                layer_bytes=t.perf.unit_bytes,
+                max_remap_fraction=max_remap_fraction))
+        self.controller = RemappingController(
+            self.store,
+            ControllerConfig(
+                victim_policy=victim_policy, double_buffer=double_buffer,
+                buffer_mode=buffer_mode, pipeline_cap=pipeline_cap,
+                dynamic_reversion=dynamic_reversion,
+                reversion_hysteresis=reversion_hysteresis),
+            {n: t.perf.t_transfer_unit for n, t in self.tenants.items()},
+        )
+        self.scheduler = make_scheduler(
+            scheduler, list(self.tenants), quantum_steps=quantum_steps) \
+            if scheduler == "temporal" else make_scheduler(scheduler, list(self.tenants))
+        self.now = 0.0
+        self.finished: List[Request] = []
+        self.host_link_busy_s = 0.0
+        self.swap_overflow_peak = 0
+
+    # ------------------------------------------------------------------ run
+    def run(self, requests: List[Request], max_time: float = 1e6) -> ServingMetrics:
+        incoming = deque(sorted(requests, key=lambda r: r.arrival))
+        idle_guard = 0
+        no_progress = 0
+        tokens_done = -1
+        while (incoming or any(t.queue or t.running
+                               for t in self.tenants.values())):
+            # starvation guard: a head request that can never fit (tenant
+            # mis-sized for vllm mode) is dropped as failed after a bound
+            tok_now = sum(len(r.generated) for t in self.tenants.values()
+                          for r in t.running) + len(self.finished)
+            no_progress = no_progress + 1 if tok_now == tokens_done else 0
+            tokens_done = tok_now
+            if no_progress > 10_000:
+                for t in self.tenants.values():
+                    if t.queue and not t.running:
+                        r = t.queue.popleft()
+                        r.finished = True
+                        self.finished.append(r)
+                no_progress = 0
+                continue
+            if self.now > max_time or idle_guard > 2_000_000:
+                break
+            while incoming and incoming[0].arrival <= self.now:
+                r = incoming.popleft()
+                self.tenants[r.model].queue.append(r)
+            pending = {n: len(t.queue) for n, t in self.tenants.items()}
+            running = {n: len(t.running) for n, t in self.tenants.items()}
+            active = self.scheduler.schedule(pending, running, self.now)
+            self.store.mark_active(active)
+            if not active:
+                # fast-forward to next arrival
+                if incoming:
+                    self.now = max(self.now, incoming[0].arrival)
+                idle_guard += 1
+                continue
+            idle_guard = 0
+            self._sync_memory()
+            dt = 0.0
+            if self.scheduler.__class__.__name__ == "SpatialScheduler":
+                # concurrent tenants: iteration time = max over tenants
+                dts = [self._tenant_iteration(self.tenants[n]) for n in active]
+                dt = max(dts) if dts else 0.0
+            else:
+                for n in active:
+                    dt += self._tenant_iteration(self.tenants[n])
+            dt += self._idle_control()
+            self.now += max(dt, 1e-6)
+        makespan = self.now
+        return ServingMetrics.from_requests(self.finished, makespan)
+
+    # ----------------------------------------------------------- iteration
+    def _capacity(self, t: SimTenant) -> int:
+        """Device KV capacity currently available to tenant t."""
+        base = t.kv_capacity_base
+        if self.mode == "mirage":
+            base += sum(m.remapped_bytes for m in self.store.models.values())
+        elif self.mode == "swap":
+            base += self.hw.host_dram_bytes // 4
+        return base
+
+    def _tenant_iteration(self, t: SimTenant) -> float:
+        dt = 0.0
+        dt += self._admit(t)
+        dt += self._decode(t)
+        return dt
+
+    def _admit(self, t: SimTenant) -> float:
+        dt = 0.0
+        admitted_tokens = 0
+        while t.queue and len(t.running) < t.max_batch:
+            r = t.queue[0]
+            # vLLM-style watermark: leave decode headroom per running request
+            # so admission can never thrash against decode preemptions.
+            headroom = 32 * len(t.running) * t.kv_token_bytes
+            need = (r.total_len + 1) * t.kv_token_bytes + headroom
+            if t.kv_used() + need > self._capacity(t):
+                if self.mode != "vllm":
+                    self._on_pressure(t)
+                if t.kv_used() + need > self._capacity(t):
+                    break
+            t.queue.popleft()
+            t.running.append(r)
+            admitted_tokens += r.prompt_len
+            tp = t.perf.prefill_time(r.prompt_len)
+            # cold-start reload of remapped layers overlaps prefill (§5.3)
+            alpha = self.store.models[t.name].remapped_alpha
+            reload = t.perf.reload_time(alpha) if alpha else 0.0
+            dt += max(tp, reload)
+            now = self.now + dt
+            r.t_first_token = now
+            r.generated.append(0)
+            r.token_times.append(now)
+        return dt
+
+    def _decode(self, t: SimTenant) -> float:
+        if not t.running:
+            return 0.0
+        # per-token page demand
+        need = len(t.running) * t.kv_token_bytes
+        stall = 0.0
+        if t.kv_used() + need > self._capacity(t):
+            stall += self._on_pressure(t)
+        batch = len(t.running)
+        if batch == 0:
+            return stall
+        avg_ctx = sum(r.total_len for r in t.running) / batch
+        info = self.store.models[t.name]
+        resident_fraction = 1.0 - info.remapped_alpha / max(info.num_layers, 1)
+        streamed = 0
+        bubble = 0.0
+        if self.mode == "mirage" and info.remapped_alpha:
+            n = info.num_layers
+            t_c_layer = t.perf.decode_step_time(batch, avg_ctx) / n
+            t_t = t.perf.t_transfer_unit
+            plan = self.controller._plan(
+                info, info.remapped_alpha, {t.name: t_c_layer})
+            m_layers = plan.m if plan else info.remapped_alpha + 2
+            beta = m_layers - info.remapped_alpha
+            streamed = m_layers * t.perf.unit_bytes
+            self.host_link_busy_s += streamed / self.hw.host_link_bw
+            # pipeline-bubble model (paper eqs. 4/5): per-token stall when
+            # the transfer chain cannot hide under the compute budget.
+            #   beta=1 budget: T_c*(n-alpha-1); beta=2 budget: T_c*n
+            # Contiguous (non-uniform) selection ablation: every transfer
+            # must fit the single wrap-around gap of n-m layers (§5.4).
+            if self.uniform_selection:
+                budget = t_c_layer * (n if beta >= 2 else max(n - info.remapped_alpha - 1, 0))
+            else:
+                budget = t_c_layer * max(n - m_layers, 0)
+            bubble = max(0.0, m_layers * t_t - budget)
+        dt = t.perf.decode_step_time(
+            batch, avg_ctx, resident_fraction, streamed) + bubble
+        if self.mode == "swap":
+            overflow = max(t.kv_used() - t.kv_capacity_base, 0)
+            self.swap_overflow_peak = max(self.swap_overflow_peak, overflow)
+            dt = max(dt, t.perf.swap_step_time(overflow))
+        dt += stall
+        now = self.now + dt
+        for r in list(t.running):
+            r.generated.append(0)
+            r.token_times.append(now)
+            if len(r.generated) >= r.max_new_tokens:
+                r.finished = True
+                t.running.remove(r)
+                self.finished.append(r)
+        return dt
+
+    # ------------------------------------------------------------- pressure
+    def _on_pressure(self, t: SimTenant) -> float:
+        """Returns stall seconds charged to this iteration."""
+        if self.mode == "vllm":
+            return self._preempt_youngest(t)
+        if self.mode == "swap":
+            return 0.0
+        t_compute = {
+            n: (tt.perf.t_compute_layer_decode
+                if self.store.models[n].active
+                else tt.perf.prefill_time(512) / tt.perf.repeats)
+            for n, tt in self.tenants.items()}
+        decisions = self.controller.step(kv_pressure=True, t_compute=t_compute)
+        stall = 0.0
+        for d in decisions:
+            if d.reverted:
+                stall += t.perf.reload_time(1)   # unidirectional restore
+        return stall
+
+    def _idle_control(self) -> float:
+        """Dynamic reversion opportunity once per scheduler iteration;
+        returns the (unidirectional) parameter-restore time charged."""
+        if self.mode != "mirage":
+            return 0.0
+        self._sync_memory()
+        t_compute = {n: tt.perf.t_compute_layer_decode
+                     for n, tt in self.tenants.items()}
+        decisions = self.controller.step(kv_pressure=False, t_compute=t_compute)
+        stall = 0.0
+        for d in decisions:
+            if d.reverted:
+                m = self.store.models[d.model]
+                stall += m.layer_bytes / self.hw.host_link_bw
+        return stall
+
+    def _preempt_youngest(self, t: SimTenant) -> float:
+        cands = [r for tt in self.tenants.values() for r in tt.running]
+        if not cands:
+            return 0.0
+        victim = max(cands, key=lambda r: r.arrival)
+        vt = self.tenants[victim.model]
+        vt.running.remove(victim)
+        victim.preemptions += 1
+        # recompute: prompt+generated re-prefilled on re-admission
+        victim.prompt = np.zeros(victim.total_len, np.int32)
+        victim.generated = []
+        vt.queue.appendleft(victim)
+        # the paper: decode pauses for all active requests during eviction +
+        # recompute; charge the recompute time as the stall
+        return vt.perf.prefill_time(victim.total_len)
+
+    # controller's MemoryInfo free_fraction is driven by byte accounting
+    def _sync_memory(self):
+        used = sum(t.kv_used() for t in self.tenants.values())
+        page = self.store.memory.page_bytes
+        self.store.note_kv_usage(used // page)

@@ -1,0 +1,4 @@
+from repro.training.optimizer import OptimizerConfig, make_optimizer
+from repro.training.train_step import make_train_step
+from repro.training.data import batch_for_step
+from repro.training import checkpoint

@@ -1,0 +1,98 @@
+"""Sharded checkpointing with elastic restore.
+
+Layout: <dir>/step_<N>/manifest.json + one .npy per leaf (keyed by a stable
+flattened path). Restore takes an optional tree of target shardings and
+device_puts each leaf — restoring onto a *different* mesh (fewer/more pods)
+is therefore just a resharding device_put (elastic scaling path). On a real
+multi-host cluster each host writes its addressable shards; this process is
+single-host so leaves are full arrays (documented in DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(_key_str(k) for k in path)
+        out.append((key, leaf))
+    return out
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return f"[{k.idx}]"
+    return str(k)
+
+
+def save(ckpt_dir: str, step: int, tree, extra: Optional[Dict] = None) -> str:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    leaves = _flatten_with_paths(tree)
+    manifest = {"step": step, "leaves": [], "extra": extra or {}}
+    for i, (key, leaf) in enumerate(leaves):
+        arr = np.asarray(leaf)
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {"key": key, "file": fname, "shape": list(arr.shape),
+             "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(path):      # atomic-ish replace
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+    _gc(ckpt_dir, keep=3)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, target_tree,
+            shardings=None) -> Tuple[Any, Dict]:
+    """Rebuild ``target_tree``'s structure from disk; ``shardings`` (same
+    structure, or None) controls placement — pass shardings built for a NEW
+    mesh to restore elastically onto a different topology."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_key = {l["key"]: l for l in manifest["leaves"]}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+    shard_leaves = (jax.tree.leaves(shardings)
+                    if shardings is not None else [None] * len(flat))
+    assert len(shard_leaves) == len(flat)
+    out = []
+    for (pathk, leaf), sh in zip(flat, shard_leaves):
+        key = "/".join(_key_str(k) for k in pathk)
+        meta = by_key[key]
+        arr = np.load(os.path.join(path, meta["file"]))
+        assert list(arr.shape) == list(leaf.shape), (key, arr.shape, leaf.shape)
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(int(m.group(1)) for d in os.listdir(ckpt_dir)
+                   if (m := re.fullmatch(r"step_(\d+)", d)))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)

@@ -1,0 +1,55 @@
+"""Deterministic synthetic data pipeline.
+
+Every batch is a pure function of (seed, step) — after a restart the loop
+resumes at the checkpointed step and replays identical data, which is the
+fault-tolerance contract (no data-loader state to persist). Two flavors:
+token LM batches and stub-modality batches (frames / patch embeddings)
+matching each arch's ``input_specs``.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.registry import Model, WHISPER_DECODER_LEN
+
+
+def batch_for_step(model: Model, shape: ShapeConfig, seed: int, step: int,
+                   batch_override: int = 0) -> Dict[str, jax.Array]:
+    """Synthetic training batch for (arch x shape) at a given step."""
+    cfg = model.cfg
+    b = batch_override or shape.global_batch
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    kt, kf = jax.random.split(key)
+    if cfg.is_encoder_decoder:
+        s_dec = min(WHISPER_DECODER_LEN, shape.seq_len)
+        frames = jax.random.normal(
+            kf, (b, shape.seq_len, cfg.d_model), jnp.float32) * 0.02
+        tokens = jax.random.randint(kt, (b, s_dec + 1), 0, cfg.vocab_size)
+        return {
+            "frames": frames.astype(jnp.dtype(cfg.dtype)),
+            "tokens": tokens[:, :-1].astype(jnp.int32),
+            "targets": tokens[:, 1:].astype(jnp.int32),
+            "mask": jnp.ones((b, s_dec), jnp.float32),
+        }
+    s = shape.seq_len
+    out: Dict[str, jax.Array] = {}
+    s_text = s
+    if cfg.num_image_patches:
+        p = min(cfg.num_image_patches, s - 1)
+        s_text = s - p
+        out["patch_embeds"] = (jax.random.normal(
+            kf, (b, p, cfg.d_model), jnp.float32) * 0.02
+        ).astype(jnp.dtype(cfg.dtype))
+    tokens = jax.random.randint(kt, (b, s + 1), 0, cfg.vocab_size)
+    out["tokens"] = tokens[:, :s_text].astype(jnp.int32)
+    out["targets"] = tokens[:, 1:].astype(jnp.int32)
+    mask = jnp.ones((b, s), jnp.float32)
+    if cfg.num_image_patches:
+        # no loss on the image-prefix positions
+        mask = mask.at[:, :s - s_text].set(0.0)
+    out["mask"] = mask
+    return out

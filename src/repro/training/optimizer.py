@@ -1,0 +1,154 @@
+"""Optimizers: AdamW (<=10B-class) and Adafactor (trillion-parameter class).
+
+Hand-rolled (no optax dependency). Adafactor keeps factored second moments
+(row/col statistics) so the 1T MoE's optimizer state is O(d_in + d_out) per
+matrix instead of O(d_in * d_out) — this is what lets kimi-k2 train on the
+512-chip mesh (DESIGN.md §5). State trees inherit the parameter shardings
+leaf-by-leaf (factored stats shard like their reduced axes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"            # adamw | adafactor
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    # adafactor
+    decay_rate: float = 0.8
+    clip_threshold: float = 1.0
+    min_dim_size_to_factor: int = 128
+    warmup_steps: int = 100
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    return cfg.learning_rate * warm
+
+
+class _Upd:
+    """Opaque (non-pytree) holder so per-leaf multi-outputs survive tree.map
+    extraction even when the params tree itself contains tuples/dicts."""
+    __slots__ = ("p", "s")
+
+    def __init__(self, p, s):
+        self.p, self.s = p, s
+
+
+def _take(out, which):
+    return jax.tree.map(
+        lambda u: getattr(u, which), out,
+        is_leaf=lambda x: isinstance(x, _Upd))
+
+
+# --------------------------------------------------------------------- AdamW
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(cfg: OptimizerConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    t = step.astype(jnp.float32)
+
+    def upd(g, mu, nu, p):
+        g = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mu_hat = mu / (1 - b1 ** t)
+        nu_hat = nu / (1 - b2 ** t)
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        if p.ndim >= 2:   # no weight decay on norms/biases
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return _Upd(newp, (mu, nu))
+
+    out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+    new_params = _take(out, "p")
+    mus = jax.tree.map(lambda u: u.s[0], out, is_leaf=lambda x: isinstance(x, _Upd))
+    nus = jax.tree.map(lambda u: u.s[1], out, is_leaf=lambda x: isinstance(x, _Upd))
+    return new_params, {"mu": mus, "nu": nus, "step": step}
+
+
+# ----------------------------------------------------------------- Adafactor
+def _factored(shape, cfg) -> bool:
+    return (len(shape) >= 2
+            and shape[-1] >= cfg.min_dim_size_to_factor
+            and shape[-2] >= cfg.min_dim_size_to_factor)
+
+
+def adafactor_init(params, cfg: OptimizerConfig):
+    def init(p):
+        if _factored(p.shape, cfg):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+    return {
+        "v": jax.tree.map(init, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(cfg: OptimizerConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-cfg.decay_rate)
+
+    def upd(g, v, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if "vr" in v:
+            vr = decay * v["vr"] + (1 - decay) * g2.mean(axis=-1)
+            vc = decay * v["vc"] + (1 - decay) * g2.mean(axis=-2)
+            denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), 1e-30)
+            rf = (vr / denom)[..., None]
+            u = g * jax.lax.rsqrt(rf * vc[..., None, :] + 1e-30)
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            v2 = decay * v["v"] + (1 - decay) * g2
+            u = g * jax.lax.rsqrt(v2 + 1e-30)
+            new_v = {"v": v2}
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        if p.ndim >= 2:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        return _Upd(newp, new_v)
+
+    out = jax.tree.map(upd, grads, state["v"], params)
+    return _take(out, "p"), {"v": _take(out, "s"), "step": step}
+
+
+# ------------------------------------------------------------------ frontend
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    if cfg.name == "adamw":
+        return Optimizer(
+            init=adamw_init,
+            update=lambda g, s, p: adamw_update(cfg, g, s, p))
+    if cfg.name == "adafactor":
+        return Optimizer(
+            init=lambda p: adafactor_init(p, cfg),
+            update=lambda g, s, p: adafactor_update(cfg, g, s, p))
+    raise ValueError(f"unknown optimizer {cfg.name!r}")

@@ -1,0 +1,71 @@
+"""Training step: loss -> grads (remat + optional microbatch accumulation)
+-> clip -> optimizer. Pure function of (params, opt_state, batch); jit/pjit
+is applied by the launcher with the sharding trees from the model specs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model
+from repro.training.optimizer import Optimizer
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+def make_train_step(model: Model, opt: Optimizer, *,
+                    remat_policy: str = "dots_saveable",
+                    microbatches: int = 1,
+                    grad_clip: float = 1.0):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). With microbatches > 1 the batch's leading dim is split and
+    gradients accumulated in fp32 (sequential scan — memory, not speed)."""
+
+    def loss_fn(params, batch):
+        return model.train_loss(params, batch, remat_policy=remat_policy)
+
+    def grads_of(params, batch):
+        if microbatches == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(acc, m):
+            loss_acc, g_acc = acc
+            loss, g = jax.value_and_grad(loss_fn)(params, m)
+            g_acc = jax.tree.map(
+                lambda a, x: a + x.astype(jnp.float32), g_acc, g)
+            return (loss_acc + loss, g_acc), None
+
+        (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zero), mb)
+        inv = 1.0 / microbatches
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        params, opt_state = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step

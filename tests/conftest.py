@@ -1,0 +1,15 @@
+import os
+
+# Tests must see the real (single) CPU device — the 512-device override is
+# exclusively the dry-run's (see src/repro/launch/dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,66 @@
+"""Property tests: paged KV allocator invariants under arbitrary op traces."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PagedKVAllocator
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    base=st.integers(1, 32),
+    page=st.sampled_from([1, 4, 16]),
+    ops=st.lists(
+        st.tuples(st.sampled_from(["alloc", "free", "grow", "shrink"]),
+                  st.integers(0, 7), st.integers(1, 40)),
+        min_size=1, max_size=60),
+)
+def test_allocator_invariants(base, page, ops):
+    a = PagedKVAllocator(base, page)
+    rids = [f"r{i}" for i in range(8)]
+    for kind, i, n in ops:
+        rid = rids[i]
+        if kind == "alloc":
+            a.allocate(rid, n)
+        elif kind == "free":
+            a.free(rid)
+        elif kind == "grow":
+            a.grow(n, f"model{i % 2}")
+        elif kind == "shrink":
+            a.shrink(f"model{i % 2}")
+        a.check_invariants()
+    # page tables always reference owned pages with correct counts
+    live = [r for r in rids if r in a.seq_pages]
+    if live:
+        pt = a.page_table(live, max(len(a.seq_pages[r]) for r in live))
+        for row, rid in zip(pt, live):
+            assert set(row[:len(a.seq_pages[rid])]) == set(a.seq_pages[rid])
+
+
+def test_allocation_exact_page_math():
+    a = PagedKVAllocator(10, 4)
+    assert a.pages_needed(1) == 1 and a.pages_needed(4) == 1
+    assert a.pages_needed(5) == 2
+    a.allocate("x", 5)            # 2 pages
+    assert a.used_pages == 2
+    a.allocate("x", 3)            # 8 tokens -> still 2 pages
+    assert a.used_pages == 2
+    a.allocate("x", 1)            # 9 tokens -> 3 pages
+    assert a.used_pages == 3
+    a.free("x")
+    assert a.used_pages == 0 and a.free_pages == 10
+
+
+def test_shrink_only_when_unused():
+    a = PagedKVAllocator(2, 4)
+    seg = a.grow(4, "modelA")
+    # occupy a page inside the donated segment
+    a.free_list = sorted(a.free_list)           # static pages first
+    for _ in range(3 * 4 // 4):
+        pass
+    a.allocate("r", 9)                          # 3 pages: spills into segment
+    released = a.shrink("modelA")
+    assert released == 0 or not a.segment_in_use(seg)
+    a.check_invariants()
+    a.free("r")
+    assert a.shrink("modelA") == 4
+    a.check_invariants()

@@ -1,0 +1,72 @@
+"""Controller fuzzing: under arbitrary pressure/calm sequences and compute
+profiles, Algorithm 1 must keep its invariants — α within caps, memory
+accounting consistent, reversion only when calm, plans always valid."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ControllerConfig, MemoryInfo, MetadataStore, ModelInfo,
+    RemappingController, min_circular_gap,
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_models=st.integers(1, 4),
+    layers=st.integers(4, 24),
+    steps=st.lists(
+        st.tuples(st.booleans(),            # kv pressure?
+                  st.integers(0, 3),        # which model is active
+                  st.floats(0.01, 10.0)),   # t_compute scale
+        min_size=1, max_size=60),
+    policy=st.sampled_from(["mru", "lru"]),
+    cap=st.floats(0.1, 1.0),
+    pipeline_cap=st.booleans(),
+    seed=st.integers(0, 99),
+)
+def test_controller_invariants_under_fuzz(
+        n_models, layers, steps, policy, cap, pipeline_cap, seed):
+    names = [f"m{i}" for i in range(n_models)]
+    layer_bytes = 4096
+    page_bytes = 1024
+    store = MetadataStore(MemoryInfo(
+        hbm_bytes=1 << 30, page_bytes=page_bytes, base_kv_pages=32))
+    for i, n in enumerate(names):
+        store.register(ModelInfo(
+            name=n, num_layers=layers, layer_bytes=layer_bytes,
+            max_remap_fraction=cap))
+    ctrl = RemappingController(
+        store,
+        ControllerConfig(victim_policy=policy, pipeline_cap=pipeline_cap,
+                         revert_patience=2, reversion_hysteresis=0.05),
+        {n: 0.5 for n in names})
+
+    pages_per_unit = layer_bytes // page_bytes
+    for pressure, active_i, tc in steps:
+        active = [names[active_i % n_models]]
+        store.mark_active(active)
+        used = 0 if not pressure else store.memory.total_pages
+        store.note_kv_usage(used)
+        decisions = ctrl.step(
+            kv_pressure=pressure,
+            t_compute={n: tc for n in names})
+        for d in decisions:
+            m = store.models[d.model]
+            # alpha within [0, fraction cap]
+            assert 0 <= m.remapped_alpha <= m.max_alpha_cap
+            # plan covers all layers exactly once
+            plan = d.plan
+            got = sorted(plan.cycle_layers + plan.resident_layers)
+            assert got == list(range(layers))
+            assert plan.alpha == m.remapped_alpha
+            # uniform-interval property on the cycling set
+            if len(plan.cycle_layers) >= 2:
+                assert min_circular_gap(plan.cycle_layers, layers) >= \
+                    layers // plan.m - 1
+            # reversion only when not under pressure
+            if d.reverted:
+                assert not pressure
+        # memory accounting: elastic pages == sum over models
+        expect = sum(m.remapped_alpha * pages_per_unit
+                     for m in store.models.values())
+        assert store.memory.elastic_kv_pages == expect
+        assert store.memory.total_pages == 32 + expect

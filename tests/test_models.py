@@ -1,0 +1,139 @@
+"""Per-arch smoke tests (reduced configs) + prefill/decode equivalence.
+
+Every assigned architecture: instantiate a scaled config of the same family,
+run one forward/train step on CPU, assert output shapes and no NaNs; then
+assert single-token decode reproduces full-prefill logits exactly (the KV
+cache / recurrent-state correctness property)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, scaled_config
+from repro.models import build_model
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _nodrop(cfg):
+    if cfg.moe:
+        return dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=8.0, min_capacity=64))
+    return cfg
+
+
+def _mk(name, **over):
+    cfg = _nodrop(scaled_config(ARCHS[name], **over))
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _batch(cfg, m, key, B=2, S=12):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.random.normal(key, (B, 16, cfg.d_model)) * 0.02
+    if cfg.num_image_patches:
+        batch["patch_embeds"] = jax.random.normal(
+            key, (B, cfg.num_image_patches, cfg.d_model)) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_smoke_forward_and_train_step(name):
+    cfg, m, params = _mk(name)
+    key = jax.random.PRNGKey(1)
+    B, S = 2, 12
+    batch = _batch(cfg, m, key, B, S)
+    toks = batch["tokens"]
+    # train step: loss finite
+    full = dict(batch)
+    s_tot = S + (cfg.num_image_patches or 0)
+    if cfg.is_encoder_decoder:
+        full["targets"] = toks
+        full["mask"] = jnp.ones(toks.shape, jnp.float32)
+        # frames is the "sequence"; decoder len = S
+        full["frames"] = jax.random.normal(key, (B, 16, cfg.d_model)) * 0.02
+    else:
+        full["targets"] = jax.random.randint(key, (B, s_tot), 0, cfg.vocab_size)
+        full["mask"] = jnp.ones((B, s_tot), jnp.float32)
+    loss = m.train_loss(params, full, remat_policy="none")
+    assert jnp.isfinite(loss), name
+    # prefill shapes + no NaN
+    logits, state = m.prefill(params, batch, max_context=32)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    # one decode step
+    lg2, st2 = m.decode_step(params, state, toks[:, 0], 32)
+    assert lg2.shape == (B, cfg.vocab_size)
+    assert not bool(jnp.isnan(lg2).any())
+    assert int(st2["pos"][0]) == int(state["pos"][0]) + 1
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_decode_matches_prefill(name):
+    cfg, m, params = _mk(name)
+    key = jax.random.PRNGKey(2)
+    B, S = 2, 12
+    batch = _batch(cfg, m, key, B, S + 1)
+    toks = batch["tokens"]
+    lg_full, _ = m.prefill(params, batch, 32)
+    short = dict(batch, tokens=toks[:, :S])
+    _, st = m.prefill(params, short, 32)
+    lg_step, _ = m.decode_step(params, st, toks[:, S], 32)
+    err = float(jnp.abs(lg_step - lg_full).max()
+                / (jnp.abs(lg_full).max() + 1e-9))
+    assert err < 2e-3, (name, err)
+
+
+def test_swa_ring_buffer_decode():
+    cfg, m, params = _mk("h2o-danube-3-4b", sliding_window=8)
+    key = jax.random.PRNGKey(3)
+    toks = jax.random.randint(key, (2, 21), 0, cfg.vocab_size)
+    lg_full, _ = m.prefill(params, {"tokens": toks}, 24)
+    _, st = m.prefill(params, {"tokens": toks[:, :20]}, 24)
+    lg2, _ = m.decode_step(params, st, toks[:, 20], 24)
+    err = float(jnp.abs(lg2 - lg_full).max() / jnp.abs(lg_full).max())
+    assert err < 2e-3, err
+
+
+def test_batched_decode_matches_solo():
+    cfg, m, params = _mk("llama3-8b", num_layers=2)
+    key = jax.random.PRNGKey(4)
+    p1 = jax.random.randint(jax.random.PRNGKey(5), (1, 10), 0, cfg.vocab_size)
+    p2 = jax.random.randint(jax.random.PRNGKey(6), (1, 10), 0, cfg.vocab_size)
+
+    def solo(prompt, steps=5):
+        lg, st = m.prefill(params, {"tokens": prompt}, 32)
+        toks = [int(jnp.argmax(lg[0]))]
+        for _ in range(steps):
+            lg, st = m.decode_step(params, st, jnp.asarray([toks[-1]]), 32)
+            toks.append(int(jnp.argmax(lg[0])))
+        return toks
+
+    state = m.init_decode_state(2, 32)
+    outs = {0: [], 1: []}
+    for slot, prompt in [(0, p1), (1, p2)]:
+        lg, st1 = m.prefill(params, {"tokens": prompt}, 32)
+        state = m.insert_slot(state, slot, st1)
+        outs[slot].append(int(jnp.argmax(lg[0])))
+    for _ in range(5):
+        t = jnp.asarray([outs[0][-1], outs[1][-1]])
+        lg, state = m.decode_step(params, state, t, 32)
+        outs[0].append(int(jnp.argmax(lg[0])))
+        outs[1].append(int(jnp.argmax(lg[1])))
+    assert outs[0] == solo(p1) and outs[1] == solo(p2)
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_abstract_specs_match_init(name):
+    """Spec tree and init() agree on shapes/dtypes (dry-run soundness)."""
+    cfg, m, params = _mk(name, num_layers=2)
+    abst = m.abstract_params()
+    flat_a = jax.tree.leaves(abst)
+    flat_p = jax.tree.leaves(params)
+    assert len(flat_a) == len(flat_p)
+    for a, p in zip(flat_a, flat_p):
+        assert a.shape == p.shape and a.dtype == p.dtype

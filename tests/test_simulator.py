@@ -1,0 +1,80 @@
+"""Simulator sanity: the paper's qualitative orderings hold at high load."""
+import pytest
+
+from benchmarks.common import c1_tenants, frac, run_sim, trace_for
+from repro.configs import ARCHS
+from repro.serving.hw import GH200, TPU_V5E_PCIE
+from repro.serving.simulator import SimTenantConfig
+
+
+def _fresh(trace):
+    """Requests are mutable runtime objects — copy per simulator run."""
+    return [type(r)(rid=r.rid, model=r.model, prompt=r.prompt.copy(),
+                    max_new_tokens=r.max_new_tokens, arrival=r.arrival)
+            for r in trace]
+
+
+@pytest.fixture(scope="module")
+def high_load():
+    tn = c1_tenants()
+    return tn, trace_for(tn, "sharegpt", 12.0, duration=15)
+
+
+def test_mode_ordering_at_high_load(high_load):
+    tn, trace = high_load
+    thru, ttft = {}, {}
+    for mode in ("vllm", "swap", "mirage"):
+        met, _ = run_sim(tn, _fresh(trace), mode, scheduler="temporal", hw=GH200)
+        thru[mode] = met.throughput_tok_s
+        ttft[mode] = met.p99_ttft
+    # paper Fig 8/14: mirage > swap > vllm on throughput; reverse on TTFT
+    assert thru["mirage"] > thru["vllm"] * 1.05, thru
+    assert thru["mirage"] >= thru["swap"] * 0.95, thru
+    assert ttft["mirage"] < ttft["vllm"], ttft
+
+
+def test_no_difference_at_low_load():
+    """Remapping only activates under pressure; with bounded prompts at low
+    rate (genuinely pressure-free) the modes must be identical."""
+    import numpy as np
+    tn = c1_tenants()
+    trace = trace_for(tn, "alpaca", 1.0, duration=10)
+    for r in trace:   # drop lognormal long-tail outliers that alone exceed
+        r.prompt = r.prompt[:1024]          # a tenant's 1 GB KV reservation
+        r.max_new_tokens = min(r.max_new_tokens, 256)
+    mets = {}
+    for m in ("vllm", "mirage"):
+        met, sim = run_sim(tn, _fresh(trace), m, scheduler="temporal", hw=GH200)
+        assert met.preemptions == 0
+        assert not sim.controller.decisions_log
+        mets[m] = met
+    assert abs(mets["vllm"].throughput_tok_s
+               - mets["mirage"].throughput_tok_s) < 1e-6
+
+
+def test_remap_decisions_only_under_pressure():
+    tn = c1_tenants()
+    _, sim_low = run_sim(tn, trace_for(tn, "alpaca", 1.0, duration=10),
+                         "mirage", scheduler="temporal", hw=GH200)
+    _, sim_high = run_sim(tn, trace_for(tn, "sharegpt", 12.0, duration=15),
+                          "mirage", scheduler="temporal", hw=GH200)
+    low = sum(1 for d in sim_low.controller.decisions_log if not d.reverted)
+    high = sum(1 for d in sim_high.controller.decisions_log if not d.reverted)
+    assert low == 0 and high > 0
+
+
+def test_vllm_preempts_under_pressure(high_load):
+    tn, trace = high_load
+    met, _ = run_sim(tn, _fresh(trace), "vllm", scheduler="temporal", hw=GH200)
+    assert met.preemptions > 0
+
+
+def test_pcie_link_reduces_remap_benefit():
+    """Paper §3: remapping profits from GH200-class links; on PCIe the
+    streamed layers throttle decode."""
+    tn = {"granite-3-8b": SimTenantConfig(
+        ARCHS["granite-3-8b"], 64, frac("granite-3-8b", 1.0))}
+    tr = trace_for(tn, "alpaca", 14.0, duration=12)
+    gh, _ = run_sim(tn, tr, "mirage", scheduler="temporal", hw=GH200)
+    pc, _ = run_sim(tn, tr, "mirage", scheduler="temporal", hw=TPU_V5E_PCIE)
+    assert gh.p99_tbt <= pc.p99_tbt * 1.05
