@@ -209,6 +209,71 @@ def fig17_remap_cap():
     return rows
 
 
+# --------------------------------- prefix sharing on the multi-turn workload
+def fig18_prefix_sharing(out_json: str = None):
+    """Prefix-aware KV sharing (radix trie + CoW pages) on multi-turn
+    conversation traffic, mirage vs vllm, sharing on vs off. The shared
+    system prompt + growing history is the workload where every remapped
+    page is multiplied by its share count. Writes BENCH_prefix_sharing.json
+    next to this file (or to ``out_json``)."""
+    import json
+    import os
+
+    from benchmarks.common import frac
+    from repro.configs import ARCHS
+    from repro.serving.simulator import SimTenantConfig
+    from repro.serving.traces import ConversationSpec, multi_turn_trace
+
+    def tenants():
+        return {
+            "llama3-8b": SimTenantConfig(
+                ARCHS["llama3-8b"], 64, frac("llama3-8b", 1.0)),
+            "granite-3-8b": SimTenantConfig(
+                ARCHS["granite-3-8b"], 64, frac("granite-3-8b", 1.0)),
+        }
+
+    def trace():
+        return multi_turn_trace(
+            [ConversationSpec(name, num_sessions=24, turns=5,
+                              system_prompt_len=512, user_len=64,
+                              assistant_len=128, max_new_tokens=64,
+                              think_time=2.0, session_rate=2.0)
+             for name in tenants()], seed=3)
+
+    rows, record = [], []
+    for mode in ("vllm", "mirage"):
+        for sharing in (False, True):
+            met, sim = run_sim(tenants(), trace(), mode,
+                               scheduler="temporal", hw=GH200,
+                               prefix_sharing=sharing)
+            rows.append(["fig18", mode, "on" if sharing else "off",
+                         met.mean_ttft, met.p99_ttft, met.p99_tbt,
+                         met.throughput_tok_s, met.prefix_hit_rate,
+                         met.saved_prefill_tokens, met.preemptions])
+            record.append({
+                "mode": mode, "prefix_sharing": sharing,
+                "mean_ttft_s": met.mean_ttft, "p99_ttft_s": met.p99_ttft,
+                "p99_tbt_s": met.p99_tbt,
+                "throughput_tok_s": met.throughput_tok_s,
+                "prefix_hit_rate": met.prefix_hit_rate,
+                "saved_prefill_tokens": met.saved_prefill_tokens,
+                "preemptions": met.preemptions,
+            })
+    emit(rows, ["bench", "mode", "sharing", "mean_ttft_s", "p99_ttft_s",
+                "p99_tbt_s", "tok_per_s", "hit_rate", "saved_tokens",
+                "preempt"])
+    path = out_json or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)),
+        "BENCH_prefix_sharing.json")
+    with open(path, "w") as f:
+        json.dump({"bench": "fig18_prefix_sharing",
+                   "workload": "multi_turn 2x24 sessions x5 turns, GH200",
+                   "rows": record}, f, indent=2)
+    print(f"# wrote {path}")
+    return rows
+
+
 ALL = [fig8_temporal, fig9_varied_rates, fig10_varied_inputs, fig11_mru_lru,
        fig12_spatial, fig13_strict_isolation, fig14_swap_vs_remap,
-       fig15_layer_selection, fig16_dynamic_reversion, fig17_remap_cap]
+       fig15_layer_selection, fig16_dynamic_reversion, fig17_remap_cap,
+       fig18_prefix_sharing]

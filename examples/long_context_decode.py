@@ -29,8 +29,8 @@ def main():
           f"decode==prefill err {err:.1e}")
 
     # 2. distributed flash-decode: KV sequence sharded over the mesh
-    mesh = jax.make_mesh((len(jax.devices()),), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_auto_mesh
+    mesh = make_auto_mesh((len(jax.devices()),), ("model",))
     b, s, hq, hkv, d = 1, 4096, 8, 2, 64
     ks = jax.random.split(jax.random.PRNGKey(2), 3)
     q = jax.random.normal(ks[0], (b, hq, d))

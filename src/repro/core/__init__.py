@@ -9,6 +9,9 @@ from repro.core.remapping_controller import (
     RemappingController, ControllerConfig, RemapDecision,
 )
 from repro.core.kv_allocator import PagedKVAllocator, Segment
+from repro.core.prefix_index import (
+    PrefixIndex, PrefixMatch, PrefixNode, PrefixStats,
+)
 from repro.core.transfer_engine import (
     TransferEngine, split_blocks, merge_blocks, make_fetch,
 )

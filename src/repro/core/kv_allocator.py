@@ -1,4 +1,5 @@
-"""Paged KV allocator with elastic segments (paper §6, vAttention-adapted).
+"""Paged KV allocator with elastic segments (paper §6, vAttention-adapted)
+and refcounted copy-on-write pages for prefix sharing.
 
 The pool is a set of *segments* of pages. Segment 0 is the static KV
 reservation; further segments are backed by device memory donated by
@@ -7,15 +8,24 @@ remapping: at a tier switch the evicted parameter stack is donated and a
 KV segment of the same size allocated — the runtime allocator reuses the
 freed HBM; page tables span segments so compiled attention sees one pool).
 
+Page lifecycle: a page is either *free* (on the free list) or *live* with
+a refcount ≥ 1. References come from sequences mapping the page
+(``allocate`` / ``fork``) and from the prefix cache (``cache_hold``).
+Copy-on-write discipline: forked (shared) pages are only ever the fully
+written prompt-prefix pages, and writers always append into freshly
+allocated pages — so "copy"-on-write never actually copies; shared pages
+are read-only by construction.
+
 Invariants (property-tested):
-  * a page is owned by at most one sequence;
-  * used + free == total across all live segments;
-  * segments only shrink when none of their pages are in use.
+  * free + live == total across all segments, every live refcount ≥ 1;
+  * a page's refcount equals the number of sequences mapping it plus one
+    if the prefix cache holds it;
+  * segments only shrink when none of their pages are live.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -37,9 +47,11 @@ class PagedKVAllocator:
         self.segments: List[Segment] = [Segment(0, base_pages, "static")]
         self._next_start = base_pages
         self.free_list: List[int] = list(range(base_pages))
-        self.owner: Dict[int, str] = {}                 # page -> request id
+        self.refs: Dict[int, int] = {}                  # page -> refcount
+        self.cached: Set[int] = set()                   # cache holds one ref
         self.seq_pages: Dict[str, List[int]] = {}       # request id -> pages
         self.seq_tokens: Dict[str, int] = {}
+        self.seq_shared: Dict[str, int] = {}            # leading CoW pages
 
     # ------------------------------------------------------------- capacity
     @property
@@ -48,11 +60,15 @@ class PagedKVAllocator:
 
     @property
     def used_pages(self) -> int:
-        return len(self.owner)
+        return len(self.refs)
 
     @property
     def free_pages(self) -> int:
         return len(self.free_list)
+
+    @property
+    def cached_pages(self) -> int:
+        return len(self.cached)
 
     def grow(self, num_pages: int, source: str) -> Segment:
         seg = Segment(self._next_start, num_pages, source)
@@ -62,7 +78,13 @@ class PagedKVAllocator:
         return seg
 
     def segment_in_use(self, seg: Segment) -> bool:
-        return any(seg.start <= p < seg.end for p in self.owner)
+        return any(seg.start <= p < seg.end for p in self.refs)
+
+    def segment_cached(self, seg: Segment) -> List[int]:
+        """Cached (refcount held only by the prefix cache) pages inside
+        ``seg`` — eviction candidates when the segment must be reverted."""
+        return [p for p in self.cached
+                if seg.start <= p < seg.end and self.refs.get(p) == 1]
 
     def shrink(self, source: str) -> int:
         """Release all unused segments donated by ``source``; returns pages
@@ -95,19 +117,66 @@ class PagedKVAllocator:
             return None
         pages = [self.free_list.pop() for _ in range(need)]
         for p in pages:
-            self.owner[p] = rid
+            self.refs[p] = 1
         self.seq_pages.setdefault(rid, []).extend(pages)
         self.seq_tokens[rid] = have + num_tokens
         return self.seq_pages[rid]
 
+    def fork(self, rid: str, pages: Sequence[int], num_tokens: int) -> None:
+        """Copy-on-write map of a cached prefix into a fresh request:
+        ``pages`` (full prompt-prefix pages holding ``num_tokens`` tokens)
+        are shared read-only; subsequent ``allocate`` calls append the
+        request's private suffix pages after them."""
+        assert rid not in self.seq_pages, f"fork into live request {rid}"
+        assert num_tokens == len(pages) * self.page_size, \
+            "only fully written pages are shareable"
+        for p in pages:
+            assert p in self.refs, f"fork of non-live page {p}"
+            self.refs[p] += 1
+        self.seq_pages[rid] = list(pages)
+        self.seq_tokens[rid] = num_tokens
+        self.seq_shared[rid] = len(pages)
+
+    def _unref(self, p: int) -> bool:
+        """Drop one reference; returns True when the page became free."""
+        self.refs[p] -= 1
+        if self.refs[p] == 0:
+            del self.refs[p]
+            self.free_list.append(p)
+            return True
+        return False
+
     def free(self, rid: str) -> int:
+        """Release a request's references. Pages shared with other requests
+        or retained by the prefix cache stay live; returns pages actually
+        returned to the free list."""
         pages = self.seq_pages.pop(rid, [])
         self.seq_tokens.pop(rid, None)
-        for p in pages:
-            del self.owner[p]
-        self.free_list.extend(pages)
-        return len(pages)
+        self.seq_shared.pop(rid, None)
+        return sum(1 for p in pages if self._unref(p))
 
+    # --------------------------------------------------------- prefix cache
+    def cache_hold(self, pages: Sequence[int]) -> None:
+        """The prefix cache takes one reference per page: the page then
+        survives its owners finishing, as a refcount-1 cached block."""
+        for p in pages:
+            assert p in self.refs, f"cache_hold of non-live page {p}"
+            assert p not in self.cached, f"page {p} already cached"
+            self.refs[p] += 1
+            self.cached.add(p)
+
+    def cache_drop(self, pages: Sequence[int]) -> int:
+        """Prefix-cache eviction: drop the cache's reference; pages nobody
+        else maps return to the free list (the low-pressure free-page
+        source tried before the remapping controller escalates)."""
+        freed = 0
+        for p in pages:
+            assert p in self.cached, f"cache_drop of uncached page {p}"
+            self.cached.discard(p)
+            freed += self._unref(p)
+        return freed
+
+    # ------------------------------------------------------------ page table
     def page_table(self, rids: List[str], max_pages: int) -> np.ndarray:
         """[len(rids), max_pages] int32, padded with page 0 (masked by
         context_lens in the attention kernel)."""
@@ -122,10 +191,20 @@ class PagedKVAllocator:
 
     def check_invariants(self) -> None:
         total = self.total_pages
-        assert len(self.free_list) + len(self.owner) == total, \
-            (len(self.free_list), len(self.owner), total)
+        assert len(self.free_list) + len(self.refs) == total, \
+            (len(self.free_list), len(self.refs), total)
         assert len(set(self.free_list)) == len(self.free_list)
-        assert not (set(self.free_list) & set(self.owner))
+        assert not (set(self.free_list) & set(self.refs))
         live = {p for s in self.segments for p in range(s.start, s.end)}
-        assert set(self.owner).issubset(live)
+        assert set(self.refs).issubset(live)
         assert set(self.free_list).issubset(live)
+        assert self.cached.issubset(set(self.refs))
+        # refcount == #mapping sequences + cache hold
+        expect: Dict[int, int] = {p: 1 for p in self.cached}
+        for pages in self.seq_pages.values():
+            for p in pages:
+                expect[p] = expect.get(p, 0) + 1
+        assert expect == self.refs, "refcounts out of sync"
+        # CoW: shared prefix pages precede private pages and stay full
+        for rid, shared in self.seq_shared.items():
+            assert shared <= len(self.seq_pages.get(rid, []))

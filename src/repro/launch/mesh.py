@@ -14,20 +14,25 @@ from __future__ import annotations
 import jax
 
 
+def make_auto_mesh(shape, axes):
+    """jax.make_mesh with all-Auto axis types, portable across jax versions
+    (jax.sharding.AxisType landed after 0.4.x; older releases default every
+    mesh axis to Auto, which is exactly what we ask for on newer ones)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_auto_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Trivial mesh over however many devices exist (tests / examples)."""
     n = len(jax.devices())
     if n >= 4:
-        return jax.make_mesh(
-            (n // 2, 2), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    return jax.make_mesh(
-        (n, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return make_auto_mesh((n // 2, 2), ("data", "model"))
+    return make_auto_mesh((n, 1), ("data", "model"))

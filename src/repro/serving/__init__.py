@@ -1,4 +1,7 @@
 from repro.serving.engine import ServingEngine, TenantConfig
 from repro.serving.request import Request, ServingMetrics
+from repro.serving.traces import (
+    ConversationSpec, TraceSpec, make_trace, multi_turn_trace, tiny_trace,
+)
 from repro.serving.hw import HardwareSpec, TPU_V5E, TPU_V5E_PCIE, GH200, SPECS
 from repro.serving.perf_model import PerfModel

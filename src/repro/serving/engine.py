@@ -32,7 +32,8 @@ import numpy as np
 from repro.configs.base import ModelConfig, RuntimeConfig
 from repro.core import (
     ControllerConfig, MetadataStore, MemoryInfo, ModelInfo,
-    PagedKVAllocator, RemapDecision, RemappingController, TransferEngine,
+    PagedKVAllocator, PrefixIndex, RemapDecision, RemappingController,
+    TransferEngine,
 )
 from repro.models import build_model
 from repro.models.common import tree_bytes
@@ -141,6 +142,7 @@ class ServingEngine:
         page_size: int = 16,
         runtime: RuntimeConfig = RuntimeConfig(),
         quantum_steps: int = 8,
+        prefix_sharing: bool = False,
     ):
         assert mode in ("mirage", "vllm", "swap")
         self.mode = mode
@@ -177,6 +179,12 @@ class ServingEngine:
         self.finished: List[Request] = []
         self.events: List[Tuple[int, str, str]] = []   # (step, kind, detail)
         self._elastic_pages: Dict[str, int] = {n: 0 for n in self.tenants}
+        # prefix sharing rides the paged pool only: dense tenants keep
+        # per-slot KV state, which has nothing shareable.
+        self.prefix: Dict[str, PrefixIndex] = {
+            n: PrefixIndex(page_size) for n, tc in tenants.items()
+            if prefix_sharing and tc.paged}
+        self._prefix_path: Dict[str, list] = {}   # rid -> acquired trie path
         for t in self.tenants.values():
             if t.paged:
                 from repro.models.lm import layer_defs
@@ -260,6 +268,16 @@ class ServingEngine:
             self.events.append(
                 (self.step_idx, "remap", f"{d.model} a={d.new_alpha}"))
         elif target_pages < cur:
+            # cached prefix blocks parked in the donated segments would
+            # block reversion forever; drop the unreferenced ones first
+            if self.prefix:
+                cand = [p for seg in self.allocator.segments
+                        if seg.source == d.model
+                        for p in self.allocator.segment_cached(seg)]
+                for idx in self.prefix.values():
+                    dropped = idx.evict_pages(cand, evictable=self._cache_only)
+                    if dropped:
+                        self.allocator.cache_drop(dropped)
             released = self.allocator.shrink(d.model)
             if released < cur - target_pages:
                 # pages still in use: undo the reversion (retry later)
@@ -275,23 +293,88 @@ class ServingEngine:
     # -------------------------------------------------------------- prefill
     def _admit(self, t: Tenant) -> bool:
         pressure = False
+        idx = self.prefix.get(t.name)
         while t.queue:
             r = t.queue[0]
             slot = t.free_slot()
             if slot is None:
                 break
+            # longest cached prefix (full pages; at least the final token is
+            # always recomputed so prefill produces the first logits).
+            # Acquiring the path pins it against our own cache eviction
+            # below; released again if admission fails on capacity.
+            # a preempt-inflated prompt can outgrow a fixed pool entirely;
+            # mirage/swap pools can still grow, but in vllm mode the
+            # request is unserveable — drop it (simulator's starvation
+            # guard, mirrored) instead of livelocking the tenant
+            if self.mode == "vllm" and \
+                    self.allocator.pages_needed(r.prompt_len + 1) \
+                    > self.allocator.total_pages:
+                t.queue.popleft()
+                r.finished = True
+                self.finished.append(r)
+                self.events.append((self.step_idx, "drop-unserveable", r.rid))
+                continue
+            match = None
+            if idx is not None:
+                match = idx.match(r.prompt, max_tokens=r.prompt_len - 1,
+                                  record=False)
+                idx.acquire(match.nodes)
+            matched_pages = len(match.pages) if match else 0
             # vLLM-style admission watermark: keep one page of headroom per
             # running request so decode can always progress (no admission
             # thrash); applies to every mode.
             reserve = sum(len(x.running()) for x in self.tenants.values())
-            need = self.allocator.pages_needed(r.prompt_len + 1) + reserve
+            need = self.allocator.pages_needed(r.prompt_len + 1) \
+                - matched_pages + reserve
             if need > self.allocator.free_pages:
+                # unreferenced cached blocks are the low-pressure free-page
+                # source, reclaimed before the controller escalates
+                self._reclaim(need - self.allocator.free_pages)
+            if need > self.allocator.free_pages and match and match.tokens:
+                # the pinned match may hold the only reclaimable pages:
+                # give up the match (prefix recomputes) and reclaim again
+                idx.release(match.nodes)
+                match = None
+                need = self.allocator.pages_needed(r.prompt_len + 1) + reserve
+                self._reclaim(need - self.allocator.free_pages)
+            if need > self.allocator.free_pages:
+                if match:
+                    idx.release(match.nodes)
                 pressure = True
                 break
-            assert self.allocator.allocate(r.rid, r.prompt_len + 1) is not None
+            if match:
+                idx.record_lookup(match.tokens, r.prompt_len)
+            if match and match.tokens:
+                self.allocator.fork(r.rid, match.pages, match.tokens)
+                self._prefix_path[r.rid] = list(match.nodes)
+                r.prefix_matched_tokens += match.tokens
+            elif match:
+                idx.release(match.nodes)
+            assert self.allocator.allocate(
+                r.rid, r.prompt_len + 1 - (match.tokens if match else 0)
+            ) is not None
             t.queue.popleft()
             self._prefill(t, r, slot)
         return pressure
+
+    def _cache_only(self, p: int) -> bool:
+        """Page is held by the prefix cache alone (no live request maps it)."""
+        return self.allocator.refs.get(p) == 1 and p in self.allocator.cached
+
+    def _reclaim(self, need_pages: int) -> int:
+        """Evict unreferenced cached prefix blocks (leaf-first LRU) to free
+        pages — tried before remapping (mirage) or preemption (vllm)."""
+        freed = 0
+        for name, idx in self.prefix.items():
+            if freed >= need_pages:
+                break
+            pages = idx.evict(need_pages - freed, evictable=self._cache_only)
+            if pages:
+                freed += self.allocator.cache_drop(pages)
+                self.events.append(
+                    (self.step_idx, "cache-evict", f"{name} n={len(pages)}"))
+        return freed
 
     def _prefill(self, t: Tenant, r: Request, slot: int) -> None:
         prompt = jnp.asarray(r.prompt[None, :])
@@ -320,7 +403,15 @@ class ServingEngine:
         self.events.append((self.step_idx, "prefill", r.rid))
 
     def _prefill_paged(self, t: Tenant, r: Request, slot: int, batch):
-        """Prefill and scatter the KV into this request's allocator pages."""
+        """Prefill and scatter the KV into this request's allocator pages.
+
+        With prefix sharing, the leading ``seq_shared`` pages were forked
+        from the cache and already hold this prefix's KV (same tokens, same
+        params, same absolute positions => identical values); only the
+        unmatched suffix is scattered, and shared pages are never written
+        (the CoW invariant). The forward itself still runs full-length —
+        the functional engine owns correctness, the simulator owns the
+        prefill-FLOP savings."""
         lm = t.model.impl
         prompt = batch["tokens"]
         x = lm.embed(t.params, prompt, batch.get("patch_embeds"))
@@ -331,11 +422,21 @@ class ServingEngine:
         logits = lm.logits_last(t.params, xo[:, -1])
         pages = self.allocator.seq_pages[r.rid]
         page_size = self.allocator.page_size
+        scratch = t.state["pool_k"].shape[1] - 1
         n = t.state["page_table"].shape[1]
-        pt_row = np.full((n,), t.state["pool_k"].shape[1] - 1, np.int32)
+        pt_row = np.full((n,), scratch, np.int32)
         pt_row[:len(pages)] = pages
+        shared = self.allocator.seq_shared.get(r.rid, 0)
+        if shared:
+            m = shared * page_size
+            caches = ({"k": caches[0]["k"][:, :, m:],
+                       "v": caches[0]["v"][:, :, m:]},)
+            scat_row = np.full((n,), scratch, np.int32)
+            scat_row[:len(pages) - shared] = pages[shared:]
+        else:
+            scat_row = pt_row
         st1 = lm.paged_state_from_prefill(
-            caches, jnp.full((1,), s, jnp.int32), jnp.asarray(pt_row[None]),
+            caches, jnp.full((1,), s, jnp.int32), jnp.asarray(scat_row[None]),
             t.state["pool_k"].shape[1], page_size,
             pool_k=t.state["pool_k"], pool_v=t.state["pool_v"])
         t.state = dict(
@@ -344,7 +445,27 @@ class ServingEngine:
             page_table=t.state["page_table"].at[slot].set(jnp.asarray(pt_row)),
             ctx=t.state["ctx"].at[slot].set(s),
         )
+        self._publish(t, r, np.asarray(r.prompt))
         return logits
+
+    def _publish(self, t: Tenant, r: Request, tokens: np.ndarray) -> None:
+        """Register this request's fully written KV pages in the prefix
+        index so later requests can fork them (cache takes one reference
+        per newly published page)."""
+        idx = self.prefix.get(t.name)
+        if idx is None:
+            return
+        pages = self.allocator.seq_pages.get(r.rid, [])
+        new_pages, path = idx.insert(tokens, pages)
+        if new_pages:
+            self.allocator.cache_hold(new_pages)
+        # the request now depends on its full path (matched + own blocks)
+        old = self._prefix_path.pop(r.rid, None)
+        if old:
+            idx.release(old)
+        if path:
+            idx.acquire(path)
+            self._prefix_path[r.rid] = path
 
     # --------------------------------------------------------------- decode
     def _decode(self, t: Tenant) -> bool:
@@ -354,7 +475,17 @@ class ServingEngine:
         pressure = False
         # page for the next token of every running request
         for r in reqs:
+            if r.slot < 0 or t.slots[r.slot] is not r:
+                # evicted by a _preempt_one earlier in this same loop
+                # (vllm victim): it is queued again — allocating for it
+                # here would leave a stale 1-token mapping behind
+                continue
             if self.allocator.allocate(r.rid, 1) is None:
+                # cached prefix blocks are the cheapest pages to reclaim —
+                # drop cold ones before remapping/preempting
+                if self._reclaim(1) and \
+                        self.allocator.allocate(r.rid, 1) is not None:
+                    continue
                 pressure = True
                 if self.mode == "vllm":
                     if self._preempt_one(exclude=r.rid) and \
@@ -442,8 +573,15 @@ class ServingEngine:
         self._preempt(r)
         return True
 
+    def _release_prefix(self, r: Request) -> None:
+        idx = self.prefix.get(r.model)
+        path = self._prefix_path.pop(r.rid, None)
+        if idx is not None and path:
+            idx.release(path)
+
     def _preempt(self, r: Request) -> None:
         t = self.tenants[r.model]
+        self._release_prefix(r)
         self.allocator.free(r.rid)
         t.clear_slot(r.slot)
         r.preemptions += 1
@@ -456,6 +594,16 @@ class ServingEngine:
         self.events.append((self.step_idx, "preempt", r.rid))
 
     def _finish(self, t: Tenant, r: Request) -> None:
+        # publish the conversation so the next turn's prompt (this prompt +
+        # this response) forks the whole history. KV exists for the prompt
+        # plus all generated tokens except the last (emitted, never fed
+        # back); only fully written pages are publishable.
+        if self.prefix.get(t.name) is not None and len(r.generated) > 1:
+            toks = np.concatenate([
+                np.asarray(r.prompt, np.int64),
+                np.asarray(r.generated[:-1], np.int64)])
+            self._publish(t, r, toks)
+        self._release_prefix(r)
         self.allocator.free(r.rid)
         t.clear_slot(r.slot)
         r.finished = True
@@ -466,3 +614,9 @@ class ServingEngine:
     def metrics(self) -> ServingMetrics:
         return ServingMetrics.from_requests(
             self.finished, makespan=float(self.step_idx))
+
+    def prefix_stats(self) -> Dict[str, Any]:
+        """Per-tenant prefix-cache counters (empty when sharing is off)."""
+        return {n: dataclasses.asdict(idx.stats)
+                | {"cached_blocks": idx.num_blocks}
+                for n, idx in self.prefix.items()}

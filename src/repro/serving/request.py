@@ -14,6 +14,7 @@ class Request:
     prompt: np.ndarray                 # int32 tokens
     max_new_tokens: int
     arrival: float = 0.0
+    session: str = ""                  # conversation id (multi-turn traces)
     # runtime
     slot: int = -1                     # decode batch slot (engine)
     generated: List[int] = dataclasses.field(default_factory=list)
@@ -21,6 +22,8 @@ class Request:
     token_times: List[float] = dataclasses.field(default_factory=list)
     finished: bool = False
     preemptions: int = 0               # vLLM-baseline recompute evictions
+    prefix_matched_tokens: int = 0     # prefill tokens served from the cache
+    #                                    (accumulated across re-admissions)
 
     @property
     def prompt_len(self) -> int:
@@ -52,28 +55,38 @@ class ServingMetrics:
     p99_tbt: float
     p50_ttft: float
     p50_tbt: float
+    mean_ttft: float
     throughput_tok_s: float
     total_tokens: int
     makespan: float
     preemptions: int
+    # prefix sharing (0 when disabled)
+    saved_prefill_tokens: int = 0      # prompt tokens served from cached KV
+    prefix_hit_rate: float = 0.0       # saved / total prompt tokens
 
     @staticmethod
     def from_requests(reqs: List[Request], makespan: float) -> "ServingMetrics":
         ttfts = [r.ttft() for r in reqs if r.ttft() is not None]
         tbts = [t for r in reqs for t in r.tbts()]
         tokens = sum(len(r.generated) for r in reqs)
+        saved = sum(r.prefix_matched_tokens for r in reqs)
+        prompt_tokens = sum(r.prompt_len for r in reqs)
         return ServingMetrics(
             p99_ttft=percentile(ttfts, 99),
             p99_tbt=percentile(tbts, 99),
             p50_ttft=percentile(ttfts, 50),
             p50_tbt=percentile(tbts, 50),
+            mean_ttft=float(np.mean(ttfts)) if ttfts else float("nan"),
             throughput_tok_s=tokens / makespan if makespan > 0 else float("nan"),
             total_tokens=tokens,
             makespan=makespan,
             preemptions=sum(r.preemptions for r in reqs),
+            saved_prefill_tokens=saved,
+            prefix_hit_rate=saved / prompt_tokens if prompt_tokens else 0.0,
         )
 
     def row(self) -> str:
         return (f"p99_ttft={self.p99_ttft:.4f} p99_tbt={self.p99_tbt:.5f} "
                 f"p50_tbt={self.p50_tbt:.5f} thru={self.throughput_tok_s:.1f} "
-                f"preempt={self.preemptions}")
+                f"preempt={self.preemptions} "
+                f"prefix_hit={self.prefix_hit_rate:.2f}")

@@ -20,10 +20,20 @@ class Scheduler:
 @dataclasses.dataclass
 class TemporalScheduler(Scheduler):
     """One model owns the whole accelerator per quantum (round robin over
-    models with work). Suits multi-agent pipelines / idle-heavy tenants."""
+    models with work). Suits multi-agent pipelines / idle-heavy tenants.
+
+    Quantum accounting: a fresh quantum grants ``quantum_steps`` schedule
+    calls (the grant itself plus quantum_steps-1 decrements). On expiry the
+    rotation scans the other models first and, when none of them has work,
+    deliberately lands back on the current model at k == len(order) with a
+    fresh quantum — a lone busy tenant is never stalled by its own expiry
+    (covered by tests/test_scheduler.py). ``_current`` starts at -1 (i.e.
+    "before the first model") so the very first quantum goes to the first
+    busy model in declaration order instead of skipping it.
+    """
     models: Sequence[str]
     quantum_steps: int = 32
-    _current: int = 0
+    _current: int = -1
     _steps_left: int = 0
 
     def schedule(self, pending, running, now) -> List[str]:
@@ -32,13 +42,15 @@ class TemporalScheduler(Scheduler):
         if self._steps_left > 0 and busy(order[self._current]):
             self._steps_left -= 1
             return [order[self._current]]
-        # rotate to the next model with work
+        # rotate to the next model with work (k == len(order) revisits the
+        # current model: quantum expiry with a single busy tenant re-grants)
         for k in range(1, len(order) + 1):
             cand = (self._current + k) % len(order)
             if busy(order[cand]):
                 self._current = cand
                 self._steps_left = self.quantum_steps - 1
                 return [order[cand]]
+        self._steps_left = 0   # idle: no leftover quantum survives the gap
         return []
 
 

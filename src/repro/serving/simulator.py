@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import (
-    ControllerConfig, MemoryInfo, MetadataStore, ModelInfo,
+    ControllerConfig, MemoryInfo, MetadataStore, ModelInfo, PrefixIndex,
     RemappingController,
 )
 from repro.serving.hw import HardwareSpec, GH200
@@ -45,7 +45,8 @@ class SimTenantConfig:
 
 
 class SimTenant:
-    def __init__(self, name: str, tc: SimTenantConfig, hw: HardwareSpec):
+    def __init__(self, name: str, tc: SimTenantConfig, hw: HardwareSpec,
+                 prefix_page: int = 0):
         self.name = name
         self.cfg = tc.cfg
         self.perf = PerfModel(tc.cfg, hw)
@@ -57,9 +58,34 @@ class SimTenant:
         self.running: List[Request] = []
         self.kv_token_bytes = max(kv_bytes_per_token(tc.cfg), 1)
         self.needs_reload = 0.0    # pending cold-start reload seconds
+        # prefix sharing (block-granular; virtual page handles)
+        self.index: Optional[PrefixIndex] = \
+            PrefixIndex(prefix_page) if prefix_page else None
+        self._next_vpage = 0
+        self._shared: Dict[str, int] = {}   # rid -> tokens served from cache
+        self._paths: Dict[str, list] = {}   # rid -> acquired trie path
+
+    def cache_bytes(self) -> int:
+        if self.index is None:
+            return 0
+        return self.index.num_blocks * self.index.page_size \
+            * self.kv_token_bytes
 
     def kv_used(self) -> int:
-        return sum(r.total_len * self.kv_token_bytes for r in self.running)
+        """Device KV bytes: each request's private tokens (suffix + decode)
+        plus the deduplicated cached blocks, counted once."""
+        private = sum((r.total_len - self._shared.get(r.rid, 0))
+                      * self.kv_token_bytes for r in self.running)
+        return private + self.cache_bytes()
+
+    def cache_reclaim(self, bytes_needed: int) -> int:
+        """LRU-evict unreferenced cached blocks; returns bytes freed —
+        the low-pressure free source tried before the controller."""
+        if self.index is None or bytes_needed <= 0:
+            return 0
+        block_bytes = self.index.page_size * self.kv_token_bytes
+        n = -(-bytes_needed // block_bytes)
+        return len(self.index.evict(n)) * block_bytes
 
 
 class Simulator:
@@ -80,12 +106,17 @@ class Simulator:
         reversion_hysteresis: float = 0.3,
         uniform_selection: bool = True,   # ablation: False = contiguous
         seed: int = 0,
+        prefix_sharing: bool = False,
+        prefix_page: int = 32,            # tokens per shared KV block
     ):
         assert mode in ("mirage", "vllm", "swap")
         self.mode = mode
         self.hw = hw
         self.uniform_selection = uniform_selection
-        self.tenants = {n: SimTenant(n, tc, hw) for n, tc in tenants.items()}
+        self.tenants = {
+            n: SimTenant(n, tc, hw,
+                         prefix_page=prefix_page if prefix_sharing else 0)
+            for n, tc in tenants.items()}
         page_bytes = 2 << 20
         self.store = MetadataStore(MemoryInfo(
             hbm_bytes=hw.hbm_bytes, page_bytes=page_bytes,
@@ -186,19 +217,38 @@ class Simulator:
         admitted_tokens = 0
         while t.queue and len(t.running) < t.max_batch:
             r = t.queue[0]
+            # longest cached prefix: those tokens neither occupy new KV
+            # bytes nor cost prefill FLOPs (at least one token always
+            # recomputes, producing the first logits)
+            match = None
+            if t.index is not None:
+                match = t.index.match(r.prompt, max_tokens=r.prompt_len - 1,
+                                      record=False)
+                # pin the path so our own reclaim below can't evict it
+                t.index.acquire(match.nodes)
+            matched = match.tokens if match else 0
             # vLLM-style watermark: leave decode headroom per running request
             # so admission can never thrash against decode preemptions.
             headroom = 32 * len(t.running) * t.kv_token_bytes
-            need = (r.total_len + 1) * t.kv_token_bytes + headroom
+            need = (r.total_len - matched + 1) * t.kv_token_bytes + headroom
             if t.kv_used() + need > self._capacity(t):
-                if self.mode != "vllm":
+                t.cache_reclaim(t.kv_used() + need - self._capacity(t))
+                if t.kv_used() + need > self._capacity(t) \
+                        and self.mode != "vllm":
                     self._on_pressure(t)
                 if t.kv_used() + need > self._capacity(t):
+                    if match is not None:
+                        t.index.release(match.nodes)
                     break
             t.queue.popleft()
             t.running.append(r)
-            admitted_tokens += r.prompt_len
-            tp = t.perf.prefill_time(r.prompt_len)
+            if match is not None:
+                t.index.record_lookup(matched, r.prompt_len)
+                t._paths[r.rid] = list(match.nodes)
+                t._shared[r.rid] = matched
+                r.prefix_matched_tokens += matched
+            admitted_tokens += r.prompt_len - matched
+            tp = t.perf.prefill_time(r.prompt_len - matched)
             # cold-start reload of remapped layers overlaps prefill (§5.3)
             alpha = self.store.models[t.name].remapped_alpha
             reload = t.perf.reload_time(alpha) if alpha else 0.0
@@ -215,6 +265,8 @@ class Simulator:
         # per-token page demand
         need = len(t.running) * t.kv_token_bytes
         stall = 0.0
+        if t.kv_used() + need > self._capacity(t):
+            t.cache_reclaim(t.kv_used() + need - self._capacity(t))
         if t.kv_used() + need > self._capacity(t):
             stall += self._on_pressure(t)
         batch = len(t.running)
@@ -260,7 +312,28 @@ class Simulator:
                 r.finished = True
                 t.running.remove(r)
                 self.finished.append(r)
+                self._retire(t, r)
         return dt
+
+    def _retire(self, t: SimTenant, r: Request) -> None:
+        """Publish the finished prompt's blocks into the prefix cache (the
+        next turn of the conversation forks them) and drop the request's
+        references. Only the prompt is published: simulated decode emits
+        placeholder tokens, which the trace's synthetic responses never
+        match, so publishing them would only create phantom blocks."""
+        if t.index is None:
+            return
+        # publish only real tokens: preemption pads the prompt with zero
+        # placeholders for the recompute, which no future prompt can match
+        real = getattr(r, "_real_prompt_len", r.prompt_len)
+        nblk = real // t.index.page_size
+        vpages = list(range(t._next_vpage, t._next_vpage + nblk))
+        new, _path = t.index.insert(r.prompt, vpages, max_tokens=real)
+        t._next_vpage += nblk
+        path = t._paths.pop(r.rid, None)
+        if path:
+            t.index.release(path)
+        t._shared.pop(r.rid, None)
 
     # ------------------------------------------------------------- pressure
     def _on_pressure(self, t: SimTenant) -> float:
@@ -305,10 +378,22 @@ class Simulator:
         vt = self.tenants[victim.model]
         vt.running.remove(victim)
         victim.preemptions += 1
-        # recompute: prompt+generated re-prefilled on re-admission
-        victim.prompt = np.zeros(victim.total_len, np.int32)
+        # recompute: prompt+generated re-prefilled on re-admission (prompt
+        # token values preserved so re-admission can re-match its prefix;
+        # simulated decode tokens are placeholders — remember where the
+        # real tokens end so _retire never publishes the padding)
+        if not hasattr(victim, "_real_prompt_len"):
+            victim._real_prompt_len = victim.prompt_len
+        victim.prompt = np.concatenate(
+            [victim.prompt,
+             np.zeros(len(victim.generated), np.int32)])
         victim.generated = []
         vt.queue.appendleft(victim)
+        if vt.index is not None:
+            path = vt._paths.pop(victim.rid, None)
+            if path:
+                vt.index.release(path)
+            vt._shared.pop(victim.rid, None)
         # the paper: decode pauses for all active requests during eviction +
         # recompute; charge the recompute time as the stall
         return vt.perf.prefill_time(victim.total_len)

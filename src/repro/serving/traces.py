@@ -56,10 +56,17 @@ class TraceSpec:
 
 
 def make_trace(specs: Sequence[TraceSpec], seed: int = 0) -> List[Request]:
-    """Multi-tenant request trace, merged and sorted by arrival."""
-    rng = np.random.default_rng(seed)
+    """Multi-tenant request trace, merged and sorted by arrival.
+
+    Seed stability: every spec draws from its own RNG stream, keyed by
+    (seed, spec index) — adding, removing, or editing one tenant's spec
+    never reshuffles another tenant's arrivals or lengths. This makes A/B
+    tenant-mix experiments comparable: the control tenants see bit-identical
+    workloads across runs.
+    """
     reqs: List[Request] = []
     for si, spec in enumerate(specs):
+        rng = np.random.default_rng([seed, si])
         mean_in, mean_out, sigma = DATASETS[spec.dataset]
         arr = bursty_arrivals(rng, spec.rate, spec.duration, spec.burstiness)
         n = len(arr)
@@ -73,6 +80,65 @@ def make_trace(specs: Sequence[TraceSpec], seed: int = 0) -> List[Request]:
                 max_new_tokens=int(o_lens[i]),
                 arrival=float(arr[i]),
             ))
+    reqs.sort(key=lambda r: r.arrival)
+    return reqs
+
+
+# ---------------------------------------------------- multi-turn conversations
+@dataclasses.dataclass
+class ConversationSpec:
+    """Sessions of growing multi-turn conversations (the shared-prefix
+    workload): every session's turn-t prompt is the full history — a system
+    prompt shared by ALL sessions of this spec, plus per-turn user
+    utterances and (synthetic) assistant responses. Consecutive turns
+    therefore share an ever-growing token prefix, and all sessions share
+    the system prompt — the structure prefix caching exploits."""
+    model: str
+    num_sessions: int = 8
+    turns: int = 4                  # turns per session
+    system_prompt_len: int = 64
+    user_len: int = 32              # mean tokens of each new user utterance
+    assistant_len: int = 32         # mean tokens of each synthetic response
+    max_new_tokens: int = 32        # decode budget per turn
+    think_time: float = 4.0         # gap between a response and the next turn
+    session_rate: float = 1.0       # session arrivals per second
+    vocab: int = 32000
+    sigma: float = 0.3              # lognormal spread of utterance lengths
+
+
+def multi_turn_trace(specs: Sequence[ConversationSpec],
+                     seed: int = 0) -> List[Request]:
+    """Conversation trace for prefix-sharing experiments. Per-spec RNG
+    streams (same stability contract as ``make_trace``). The *synthetic*
+    assistant tokens woven into later prompts stand in for the real
+    responses (unknowable at trace-generation time); the cacheable overlap
+    between turn t and t+1 is turn t's full prompt, which is what a served
+    system would observe minus the response itself."""
+    reqs: List[Request] = []
+    for si, spec in enumerate(specs):
+        rng = np.random.default_rng([seed, 1 << 16, si])
+        toks = lambda n: rng.integers(0, spec.vocab, int(n)).astype(np.int32)
+        sys_prompt = toks(spec.system_prompt_len)
+        for s in range(spec.num_sessions):
+            arrival = float(s / max(spec.session_rate, 1e-9)
+                            + rng.uniform(0, 1.0 / max(spec.session_rate, 1e-9)))
+            history = sys_prompt
+            for turn in range(spec.turns):
+                user = toks(max(1, _lognormal_lengths(
+                    rng, spec.user_len, spec.sigma, 1)[0]))
+                prompt = np.concatenate([history, user]).astype(np.int32)
+                reqs.append(Request(
+                    rid=f"{spec.model}-s{s}-t{turn}",
+                    model=spec.model,
+                    prompt=prompt,
+                    max_new_tokens=spec.max_new_tokens,
+                    arrival=arrival,
+                    session=f"{spec.model}-s{s}",
+                ))
+                assistant = toks(max(1, _lognormal_lengths(
+                    rng, spec.assistant_len, spec.sigma, 1)[0]))
+                history = np.concatenate([prompt, assistant]).astype(np.int32)
+                arrival += spec.think_time * rng.uniform(0.7, 1.3)
     reqs.sort(key=lambda r: r.arrival)
     return reqs
 

@@ -1,6 +1,6 @@
 """Property tests: paged KV allocator invariants under arbitrary op traces."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.core import PagedKVAllocator
 

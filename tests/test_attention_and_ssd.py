@@ -3,7 +3,7 @@ SSD chunked scan vs explicit recurrence (values and gradients)."""
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.models import attention_ops as aops
 from repro.models.blocks import ssd_chunked, ssd_decode_step
@@ -112,8 +112,8 @@ def test_ssd_gradients_match_recurrence():
 
 def test_distributed_decode_attention_single_device_mesh():
     """LSE-combine path on a trivial mesh == local decode attention."""
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_auto_mesh
+    mesh = make_auto_mesh((1,), ("model",))
     ks = jax.random.split(jax.random.PRNGKey(3), 3)
     b, s, hq, hkv, d = 2, 16, 4, 2, 8
     q = jax.random.normal(ks[0], (b, hq, d))

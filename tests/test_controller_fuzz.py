@@ -1,7 +1,7 @@
 """Controller fuzzing: under arbitrary pressure/calm sequences and compute
 profiles, Algorithm 1 must keep its invariants — α within caps, memory
 accounting consistent, reversion only when calm, plans always valid."""
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.core import (
     ControllerConfig, MemoryInfo, MetadataStore, ModelInfo,

@@ -5,7 +5,7 @@ from itertools import combinations
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.core import (
     ControllerConfig, MemoryInfo, MetadataStore, ModelInfo,

@@ -19,9 +19,9 @@ from repro.distributed.fault_tolerance import elastic_reshard
 from repro.models import build_model
 from repro.training import checkpoint
 
-ax = (jax.sharding.AxisType.Auto,) * 2
-mesh_big = jax.make_mesh((4, 2), ("data", "model"), axis_types=ax)
-mesh_small = jax.make_mesh((2, 2), ("data", "model"), axis_types=ax)
+from repro.launch.mesh import make_auto_mesh
+mesh_big = make_auto_mesh((4, 2), ("data", "model"))
+mesh_small = make_auto_mesh((2, 2), ("data", "model"))
 
 cfg = scaled_config(ARCHS["llama3-8b"], num_layers=2)
 model = build_model(cfg)

@@ -1,0 +1,145 @@
+"""Prefix-sharing primitives: radix-trie index + refcounted CoW allocator."""
+import numpy as np
+import pytest
+
+from repro.core import PagedKVAllocator, PrefixIndex
+
+
+# --------------------------------------------------------------- radix trie
+def test_longest_prefix_match_full_blocks_only():
+    idx = PrefixIndex(4)
+    toks = list(range(100, 110))                   # 10 tokens = 2.5 blocks
+    new, path = idx.insert(toks, [7, 8])           # only 2 full blocks cached
+    assert new == [7, 8] and len(path) == 2 and idx.num_blocks == 2
+
+    m = idx.match(toks)
+    assert m.tokens == 8 and m.pages == [7, 8]
+    # diverging block: matches only the common full-block prefix
+    m = idx.match(list(range(100, 104)) + [999] * 6)
+    assert m.tokens == 4 and m.pages == [7]
+    # shorter than one block: no match
+    assert idx.match(toks[:3]).tokens == 0
+    # max_tokens caps the match (and rounds down to a block multiple)
+    assert idx.match(toks, max_tokens=7).tokens == 4
+    assert idx.match(toks, max_tokens=3).tokens == 0
+
+
+def test_insert_is_idempotent_and_keeps_first_page():
+    idx = PrefixIndex(2)
+    new1, _ = idx.insert([1, 2, 3, 4], [10, 11])
+    # a second request computed the same blocks into different pages: the
+    # cache keeps the original pages; the duplicate stays private
+    new2, path2 = idx.insert([1, 2, 3, 4], [20, 21])
+    assert new1 == [10, 11] and new2 == []
+    assert [n.page for n in path2] == [10, 11]
+    assert idx.num_blocks == 2
+
+
+def test_refcount_lifecycle_blocks_eviction():
+    idx = PrefixIndex(2)
+    idx.insert([1, 2, 3, 4], [0, 1])
+    m = idx.match([1, 2, 3, 4])
+    idx.acquire(m.nodes)
+    assert idx.evict(10) == []                     # whole path referenced
+    idx.release(m.nodes)
+    assert sorted(idx.evict(10)) == [0, 1]
+    assert idx.num_blocks == 0
+    with pytest.raises(AssertionError):
+        idx.release(m.nodes)                       # double release
+
+
+def test_lru_leaf_first_eviction_order():
+    idx = PrefixIndex(1)
+    idx.insert([5, 6, 7], [0, 1, 2])               # chain 5 -> 6 -> 7
+    idx.insert([5, 9], [0, 3])                     # branch 5 -> 9
+    idx.match([5, 6, 7])                           # touch the 6,7 branch
+    # LRU leaf is page 3 (the 9-branch, untouched since insert)
+    assert idx.evict(1) == [3]
+    # leaf-first: next eviction takes 7 (leaf), never 5/6 (interior)
+    assert idx.evict(1) == [2]
+    assert idx.evict(10) == [1, 0]                 # parents become leaves
+    idx.check_invariants()
+
+
+def test_eviction_respects_evictable_predicate():
+    idx = PrefixIndex(2)
+    idx.insert(list(range(8)), [0, 1, 2, 3])
+    got = idx.evict(10, evictable=lambda p: p != 1)
+    # page 1 is vetoed: its node survives, so ancestors of nothing beyond
+    # it can go; only the deeper leaves [3, 2] fall
+    assert got == [3, 2] and idx.num_blocks == 2
+    idx.check_invariants()
+
+
+def test_evict_pages_targets_only_requested_leaves():
+    idx = PrefixIndex(1)
+    idx.insert([1, 2, 3], [0, 1, 2])
+    assert idx.evict_pages([1]) == []              # interior: blocked
+    assert idx.evict_pages([2]) == [2]             # leaf: dropped
+    assert idx.evict_pages([1]) == [1]             # now a leaf
+    idx.check_invariants()
+
+
+def test_stats_hit_rate():
+    idx = PrefixIndex(4)
+    idx.insert(list(range(8)), [0, 1])
+    idx.match(list(range(8)))
+    idx.match([99] * 8)
+    s = idx.stats
+    assert s.lookups == 2 and s.hits == 1 and s.matched_tokens == 8
+    assert 0.0 < s.hit_rate < 1.0
+
+
+# ------------------------------------------------- allocator CoW refcounting
+def test_fork_shares_pages_and_free_releases_in_order():
+    a = PagedKVAllocator(8, 4)
+    a.allocate("r1", 8)                            # 2 full pages
+    pages = list(a.seq_pages["r1"])
+    a.fork("r2", pages, 8)                         # CoW map of the prefix
+    assert a.used_pages == 2 and a.free_pages == 6
+    a.allocate("r2", 4)                            # private suffix page
+    assert a.seq_pages["r2"][:2] == pages and len(a.seq_pages["r2"]) == 3
+    a.check_invariants()
+    assert a.free("r1") == 0                       # shared pages stay live
+    assert a.used_pages == 3
+    assert a.free("r2") == 3                       # last ref frees everything
+    assert a.free_pages == 8
+    a.check_invariants()
+
+
+def test_cache_hold_survives_owner_and_drop_frees():
+    a = PagedKVAllocator(4, 2)
+    a.allocate("r", 4)
+    pages = list(a.seq_pages["r"])
+    a.cache_hold(pages)
+    a.free("r")
+    assert a.used_pages == 2 and a.cached_pages == 2   # cache keeps them
+    a.check_invariants()
+    assert a.cache_drop(pages) == 2
+    assert a.free_pages == 4 and a.cached_pages == 0
+    a.check_invariants()
+
+
+def test_fork_requires_full_pages_and_live_source():
+    a = PagedKVAllocator(4, 4)
+    a.allocate("r", 6)                             # page 2 only half full
+    with pytest.raises(AssertionError):
+        a.fork("x", list(a.seq_pages["r"]), 6)     # 6 % 4 != 0
+    free_page = a.free_list[0]
+    with pytest.raises(AssertionError):
+        a.fork("x", [free_page], 4)                # page is free, not live
+    a.check_invariants()
+
+
+def test_segment_cached_lists_reclaimable_pages():
+    a = PagedKVAllocator(2, 2)
+    seg = a.grow(2, "donor")
+    a.allocate("r", 8)                             # uses all 4 pages
+    cached = [p for p in a.seq_pages["r"] if seg.start <= p < seg.end]
+    a.cache_hold(cached)
+    a.free("r")
+    assert sorted(a.segment_cached(seg)) == sorted(cached)
+    assert a.shrink("donor") == 0                  # cached pages pin it
+    a.cache_drop(cached)
+    assert a.shrink("donor") == 2
+    a.check_invariants()

@@ -1,0 +1,59 @@
+"""TemporalScheduler quantum/rotation semantics (regression: a lone busy
+tenant must never stall when its own quantum expires)."""
+from repro.serving.scheduler import (
+    SpatialScheduler, TemporalScheduler, make_scheduler,
+)
+
+
+def test_single_busy_model_survives_quantum_expiry():
+    """Quantum expiry with only the current model busy: the rotation loop
+    revisits self._current last (k == len(order)) and re-grants — the
+    schedule must never return [] while work exists."""
+    s = TemporalScheduler(["a", "b", "c"], quantum_steps=2)
+    out = [s.schedule({"a": 1}, {}, float(i)) for i in range(11)]
+    assert out == [["a"]] * 11
+
+
+def test_quantum_length_and_rotation():
+    s = TemporalScheduler(["a", "b"], quantum_steps=3)
+    out = [s.schedule({"a": 1, "b": 1}, {}, float(i)) for i in range(12)]
+    # first quantum goes to the first declared model, not the second
+    assert out == [["a"]] * 3 + [["b"]] * 3 + [["a"]] * 3 + [["b"]] * 3
+
+
+def test_rotation_skips_idle_models():
+    s = TemporalScheduler(["a", "b", "c"], quantum_steps=2)
+    out = [s.schedule({"a": 1, "c": 1}, {}, float(i)) for i in range(8)]
+    assert out == [["a"], ["a"], ["c"], ["c"], ["a"], ["a"], ["c"], ["c"]]
+
+
+def test_mid_quantum_handoff_when_current_drains():
+    s = TemporalScheduler(["a", "b"], quantum_steps=8)
+    assert s.schedule({"a": 1, "b": 1}, {}, 0.0) == ["a"]
+    # a drains mid-quantum: b takes over immediately with a fresh quantum
+    out = [s.schedule({"b": 1}, {}, float(i)) for i in range(1, 9)]
+    assert out == [["b"]] * 8
+
+
+def test_idle_gap_then_single_model_resumes():
+    s = TemporalScheduler(["a", "b"], quantum_steps=4)
+    for i in range(5):
+        s.schedule({"a": 1}, {}, float(i))
+    assert s.schedule({}, {}, 5.0) == []          # fully idle
+    assert s._steps_left == 0                     # no stale quantum
+    # work for the *other* model arrives after the gap
+    out = [s.schedule({"b": 2}, {}, float(6 + i)) for i in range(6)]
+    assert out == [["b"]] * 6
+
+
+def test_quantum_expiry_after_steady_run_single_model():
+    """Exercise several consecutive expiries (steps_left resets each time)."""
+    s = TemporalScheduler(["x", "y"], quantum_steps=1)
+    out = [s.schedule({"y": 3}, {"y": 1}, float(i)) for i in range(5)]
+    assert out == [["y"]] * 5
+
+
+def test_spatial_runs_all_busy():
+    s = make_scheduler("spatial", ["a", "b", "c"])
+    assert isinstance(s, SpatialScheduler)
+    assert s.schedule({"a": 1, "c": 2}, {"b": 0}, 0.0) == ["a", "c"]

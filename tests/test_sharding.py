@@ -7,7 +7,7 @@ import subprocess
 import sys
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 import jax
 from jax.sharding import PartitionSpec as P

@@ -1,0 +1,68 @@
+"""Workload-generator contracts: seed stability + conversation structure."""
+import numpy as np
+
+from repro.serving.traces import (
+    ConversationSpec, TraceSpec, make_trace, multi_turn_trace,
+)
+
+
+def _by_model(reqs, model):
+    return sorted((r for r in reqs if r.model == model), key=lambda r: r.rid)
+
+
+def test_make_trace_per_spec_streams_are_independent():
+    """Adding a tenant must not reshuffle another tenant's arrivals,
+    lengths, or token content (regression for the shared-RNG bug)."""
+    a = TraceSpec("ma", "sharegpt", 4.0, duration=5.0)
+    b = TraceSpec("mb", "alpaca", 8.0, duration=5.0)
+    solo = _by_model(make_trace([a], seed=7), "ma")
+    multi = _by_model(make_trace([a, b], seed=7), "ma")
+    assert len(solo) == len(multi) > 0
+    for r1, r2 in zip(solo, multi):
+        assert r1.rid == r2.rid
+        assert r1.arrival == r2.arrival
+        assert r1.max_new_tokens == r2.max_new_tokens
+        assert np.array_equal(r1.prompt, r2.prompt)
+
+
+def test_make_trace_is_deterministic_per_seed():
+    spec = [TraceSpec("m", "alpaca", 8.0, duration=8.0)]
+    t1, t2 = make_trace(spec, seed=3), make_trace(spec, seed=3)
+    assert len(t1) == len(t2) > 0
+    for r1, r2 in zip(t1, t2):
+        assert np.array_equal(r1.prompt, r2.prompt) and r1.arrival == r2.arrival
+    assert any(not np.array_equal(x.prompt, y.prompt)
+               for x, y in zip(t1, make_trace(spec, seed=4)))
+
+
+def test_multi_turn_prompts_grow_by_prefix_extension():
+    """Turn t+1's prompt must literally extend turn t's prompt (that token
+    overlap is what the prefix cache exploits), and all sessions of a spec
+    share the same system prompt."""
+    spec = ConversationSpec("m", num_sessions=3, turns=3,
+                            system_prompt_len=16, user_len=8,
+                            assistant_len=8, vocab=512)
+    reqs = multi_turn_trace([spec], seed=0)
+    assert len(reqs) == 9
+    sessions = {}
+    for r in reqs:
+        sessions.setdefault(r.session, []).append(r)
+    assert len(sessions) == 3
+    sys_prompts = set()
+    for sess_reqs in sessions.values():
+        sess_reqs.sort(key=lambda r: r.arrival)
+        for prev, nxt in zip(sess_reqs, sess_reqs[1:]):
+            assert nxt.prompt_len > prev.prompt_len
+            assert np.array_equal(nxt.prompt[:prev.prompt_len], prev.prompt)
+        sys_prompts.add(tuple(sess_reqs[0].prompt[:16]))
+    assert len(sys_prompts) == 1          # shared system prompt
+
+
+def test_multi_turn_per_spec_streams_are_independent():
+    a = ConversationSpec("ma", num_sessions=2, turns=2)
+    b = ConversationSpec("mb", num_sessions=2, turns=2)
+    solo = _by_model(multi_turn_trace([a], seed=1), "ma")
+    multi = _by_model(multi_turn_trace([a, b], seed=1), "ma")
+    for r1, r2 in zip(solo, multi):
+        assert r1.rid == r2.rid and r1.arrival == r2.arrival
+        assert np.array_equal(r1.prompt, r2.prompt)
