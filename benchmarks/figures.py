@@ -273,7 +273,69 @@ def fig18_prefix_sharing(out_json: str = None):
     return rows
 
 
+# --------------------------- chunked prefill vs head-of-line interference
+def fig19_chunked_prefill(out_json: str = None):
+    """Token-budget chunked prefill on the long-prompt-vs-chat interference
+    trace: one tenant near-saturated with 8k-token prefills, one serving
+    decode-heavy chat. Reports the CHAT tenant's tail latency, chunked vs
+    monolithic, across all three memory modes. Writes
+    BENCH_chunked_prefill.json next to this file (or to ``out_json``)."""
+    import json
+    import os
+
+    from benchmarks.common import frac
+    from repro.configs import ARCHS
+    from repro.serving.request import ServingMetrics
+    from repro.serving.simulator import SimTenantConfig
+    from repro.serving.traces import interference_trace
+
+    long_m, chat_m = "llama3-8b", "granite-3-8b"
+
+    def tenants():
+        return {
+            long_m: SimTenantConfig(ARCHS[long_m], 64, frac(long_m, 6.0)),
+            chat_m: SimTenantConfig(ARCHS[chat_m], 64, frac(chat_m, 2.0)),
+        }
+
+    def trace():
+        return interference_trace(long_m, chat_m, seed=1)
+
+    rows, record = [], []
+    for mode in ("vllm", "swap", "mirage"):
+        for chunk in (0, 256):
+            met, sim = run_sim(tenants(), trace(), mode,
+                               scheduler="temporal", hw=GH200,
+                               quantum_steps=2,
+                               prefill_chunk_tokens=chunk)
+            chat = ServingMetrics.from_requests(
+                sim.finished, sim.now, model=chat_m)
+            rows.append(["fig19", mode, chunk, chat.p99_tbt, chat.p50_tbt,
+                         chat.p99_ttft, met.throughput_tok_s,
+                         met.preemptions])
+            record.append({
+                "mode": mode, "prefill_chunk_tokens": chunk,
+                "chat_p99_tbt_s": chat.p99_tbt,
+                "chat_p50_tbt_s": chat.p50_tbt,
+                "chat_p99_ttft_s": chat.p99_ttft,
+                "throughput_tok_s": met.throughput_tok_s,
+                "preemptions": met.preemptions,
+            })
+    emit(rows, ["bench", "mode", "chunk_tokens", "chat_p99_tbt_s",
+                "chat_p50_tbt_s", "chat_p99_ttft_s", "tok_per_s",
+                "preempt"])
+    path = out_json or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)),
+        "BENCH_chunked_prefill.json")
+    with open(path, "w") as f:
+        json.dump({"bench": "fig19_chunked_prefill",
+                   "workload": "64x8k-prefill tenant vs 48x192-decode chat "
+                               "tenant, GH200, temporal q=2",
+                   "rows": record}, f, indent=2)
+    print(f"# wrote {path}")
+    return rows
+
+
 ALL = [fig8_temporal, fig9_varied_rates, fig10_varied_inputs, fig11_mru_lru,
        fig12_spatial, fig13_strict_isolation, fig14_swap_vs_remap,
        fig15_layer_selection, fig16_dynamic_reversion, fig17_remap_cap,
-       fig18_prefix_sharing]
+       fig18_prefix_sharing, fig19_chunked_prefill]

@@ -77,8 +77,24 @@ class PagedKVAllocator:
         self.free_list.extend(range(seg.start, seg.end))
         return seg
 
+    @property
+    def page_id_bound(self) -> int:
+        """Exclusive upper bound on every page id ever minted. Pool arrays
+        must be sized by THIS, not ``total_pages``: ids are monotonic
+        (freed segment ranges are never reissued), so after any shrink the
+        live id range exceeds the live page count."""
+        return self._next_start
+
     def segment_in_use(self, seg: Segment) -> bool:
         return any(seg.start <= p < seg.end for p in self.refs)
+
+    def releasable_pages(self, source: str) -> int:
+        """Pages ``shrink(source)`` would release right now (segments
+        donated by ``source`` with no live page). Checked BEFORE shrinking
+        so a doomed reversion can be undone without freeing and re-minting
+        segments (which would leak page ids past the tenants' pools)."""
+        return sum(seg.num_pages for seg in self.segments
+                   if seg.source == source and not self.segment_in_use(seg))
 
     def segment_cached(self, seg: Segment) -> List[int]:
         """Cached (refcount held only by the prefix cache) pages inside

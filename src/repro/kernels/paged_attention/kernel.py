@@ -91,6 +91,141 @@ def _kernel(
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _prefill_kernel(
+    # scalar prefetch
+    page_table_ref,                # [B, N] int32 (SMEM)
+    context_lens_ref,              # [B] int32 (SMEM): tokens incl. chunk
+    q_start_ref,                   # [B] int32 (SMEM): abs pos of query 0
+    # blocks
+    q_ref,                         # [1, 1, Sq, G, D]
+    k_ref,                         # [1, 1, page, D]
+    v_ref,                         # [1, 1, page, D]
+    o_ref,                         # [1, 1, Sq, G, D]
+    # scratch
+    m_ref, l_ref, acc_ref,         # [Sq*G], [Sq*G], [Sq*G, D] f32
+    *,
+    page_size: int,
+    group: int,
+    sm_scale: float,
+    window: int,
+):
+    """Chunked-prefill attention: Sq chunk queries of one (sequence, KV
+    head) pair sweep the sequence's pages; the chunk's own K/V were
+    scattered into the pool before the call, so page j covers both the
+    prior context and the in-chunk causal block. Same online-softmax
+    pipeline as the decode kernel, with a per-query-row causal mask."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+    ctx = context_lens_ref[b]
+    q0 = q_start_ref[b]
+    sq = q_ref.shape[2]
+    rows = sq * group
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    start = j * page_size
+    live = start < ctx
+    if window > 0:
+        # the page is visible to at least the OLDEST query (largest window
+        # reach is the smallest q position: q0)
+        live = jnp.logical_and(live, q0 - (start + page_size - 1) < window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32).reshape(rows, -1) * sm_scale
+        k = k_ref[0, 0].astype(jnp.float32)                 # [page, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)             # [rows, page]
+        qpos = q0 + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, page_size), 0) // group
+        kpos = start + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, page_size), 1)
+        mask = jnp.logical_and(kpos <= qpos, kpos < ctx)
+        if window > 0:
+            mask = jnp.logical_and(mask, qpos - kpos < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).reshape(
+            sq, group, -1).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "interpret"))
+def paged_prefill_attention(
+    q: jax.Array,             # [B, Sq, Hq, D] prompt chunk
+    k_pool: jax.Array,        # [P, page, Hkv, D]
+    v_pool: jax.Array,
+    page_table: jax.Array,    # [B, N] int32
+    q_start: jax.Array,       # [B] int32 absolute position of q[:, 0]
+    context_lens: jax.Array,  # [B] int32 tokens in cache incl. the chunk
+    *,
+    window: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    b, sq, hq, d = q.shape
+    _, page, hkv, _ = k_pool.shape
+    n = page_table.shape[1]
+    group = hq // hkv
+
+    qg = q.reshape(b, sq, hkv, group, d)
+    qg = jnp.moveaxis(qg, 2, 1)                   # [B, Hkv, Sq, G, D]
+    kp = jnp.moveaxis(k_pool, 2, 1)               # [P, Hkv, page, D]
+    vp = jnp.moveaxis(v_pool, 2, 1)
+
+    grid = (b, hkv, n)
+
+    def q_map(bi, h, j, *refs):
+        return (bi, h, 0, 0, 0)
+
+    def kv_map(bi, h, j, page_table_ref, context_lens_ref, q_start_ref):
+        return (page_table_ref[bi, j], h, 0, 0)
+
+    kernel = functools.partial(
+        _prefill_kernel, page_size=page, group=group, sm_scale=d ** -0.5,
+        window=window)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, sq, group, d), q_map),
+                pl.BlockSpec((1, 1, page, d), kv_map),
+                pl.BlockSpec((1, 1, page, d), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, sq, group, d), q_map),
+            scratch_shapes=[
+                pltpu.VMEM((sq * group,), jnp.float32),
+                pltpu.VMEM((sq * group,), jnp.float32),
+                pltpu.VMEM((sq * group, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, sq, group, d), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), context_lens.astype(jnp.int32),
+      q_start.astype(jnp.int32), qg, kp, vp)
+    return jnp.moveaxis(out, 1, 2).reshape(b, sq, hq, d)
+
+
 @functools.partial(
     jax.jit, static_argnames=("window", "interpret"))
 def paged_decode_attention(

@@ -1,10 +1,16 @@
-"""Backend dispatcher for paged decode attention."""
+"""Backend dispatcher for paged attention (decode + chunked prefill)."""
 from __future__ import annotations
 
 import jax
 
-from repro.kernels.paged_attention.kernel import paged_decode_attention as _kernel
-from repro.kernels.paged_attention.ref import paged_decode_attention_ref as _ref
+from repro.kernels.paged_attention.kernel import (
+    paged_decode_attention as _kernel,
+    paged_prefill_attention as _prefill_kernel,
+)
+from repro.kernels.paged_attention.ref import (
+    paged_decode_attention_ref as _ref,
+    paged_prefill_attention_ref as _prefill_ref,
+)
 
 
 def paged_decode_attention(q, k_pool, v_pool, page_table, context_lens, *,
@@ -15,3 +21,18 @@ def paged_decode_attention(q, k_pool, v_pool, page_table, context_lens, *,
         return _kernel(q, k_pool, v_pool, page_table, context_lens,
                        window=window, interpret=True)
     return _ref(q, k_pool, v_pool, page_table, context_lens, window=window)
+
+
+def paged_prefill_attention(q, k_pool, v_pool, page_table, q_start,
+                            context_lens, *, window: int = 0,
+                            force_kernel: bool = False):
+    """Prefill-chunk queries attend over the paged pool (previously
+    scattered context + the in-chunk causal block, position-offset)."""
+    if jax.default_backend() == "tpu":
+        return _prefill_kernel(q, k_pool, v_pool, page_table, q_start,
+                               context_lens, window=window)
+    if force_kernel:
+        return _prefill_kernel(q, k_pool, v_pool, page_table, q_start,
+                               context_lens, window=window, interpret=True)
+    return _prefill_ref(q, k_pool, v_pool, page_table, q_start, context_lens,
+                        window=window)

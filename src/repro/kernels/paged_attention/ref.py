@@ -1,4 +1,7 @@
-"""Pure-jnp oracle for the paged decode-attention kernel."""
-from repro.models.attention_ops import paged_decode_attention as paged_decode_attention_ref
+"""Pure-jnp oracles for the paged attention kernels."""
+from repro.models.attention_ops import (
+    paged_decode_attention as paged_decode_attention_ref,
+    paged_prefill_attention as paged_prefill_attention_ref,
+)
 
-__all__ = ["paged_decode_attention_ref"]
+__all__ = ["paged_decode_attention_ref", "paged_prefill_attention_ref"]

@@ -319,3 +319,36 @@ def paged_decode_attention(
     q_pos = jnp.maximum(context_lens - 1, 0)
     return decode_attention(q, k, v, q_pos, kv_pos, kv_valid,
                             window=window, chunk=min(chunk, n * page))
+
+
+def paged_prefill_attention(
+    q: jax.Array,              # [B, Sq, Hq, D] one prompt chunk per sequence
+    k_pool: jax.Array,         # [P, page, Hkv, D]
+    v_pool: jax.Array,
+    page_table: jax.Array,     # [B, N] int32
+    q_start: jax.Array,        # [B] absolute position of q[:, 0]
+    context_lens: jax.Array,   # [B] tokens in cache INCLUDING this chunk
+    *,
+    window: int = 0,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Chunked-prefill attention over a paged pool (oracle for the Pallas
+    kernel): the chunk's own K/V have already been scattered into the pool,
+    so each query at absolute position ``q_start + i`` attends causally over
+    everything the pool holds for its sequence — the previously prefilled
+    context (and any CoW-shared prefix pages) plus the in-chunk causal
+    block. This is what makes token-budget chunked prefill possible: a
+    prompt's KV accumulates in its allocator pages across engine steps
+    while decode of other slots proceeds in between."""
+    b, sq = q.shape[0], q.shape[1]
+    page = k_pool.shape[1]
+    n = page_table.shape[1]
+    k = paged_gather(k_pool, page_table)
+    v = paged_gather(v_pool, page_table)
+    q_pos = q_start[:, None] + jnp.arange(sq, dtype=jnp.int32)[None]
+    kv_pos = jnp.broadcast_to(
+        jnp.arange(n * page, dtype=jnp.int32)[None], (b, n * page))
+    kv_valid = kv_pos < context_lens[:, None]
+    return flash_attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                           kv_valid=kv_valid, causal=True, window=window,
+                           chunk=min(chunk, n * page))

@@ -393,6 +393,75 @@ class LM:
         new_state = dict(state, pool_k=pk, pool_v=pv, ctx=pos + 1)
         return logits, new_state
 
+    def prefill_chunk_paged(self, params, state, slot, tokens, start,
+                            fetch=None, prefix_embeds=None):
+        """One chunked-prefill step for batch row ``slot`` against the paged
+        pool: run the transformer over ``tokens`` [S] at absolute positions
+        ``start + arange(S)``, scattering each layer's K/V into the slot's
+        pages *before* attending, so the chunk queries see the previously
+        prefilled context (including CoW-shared prefix pages) plus the
+        in-chunk causal block through one paged-context attention op.
+
+        Returns (last_logits [V], new_state). ``state["ctx"][slot]`` is
+        DEAD state while a slot is mid-prefill — the batched decode step
+        bumps every row's cursor (and scatters a garbage row through the
+        slot's pages, overwritten by the next chunk before it can become
+        visible) — so all scatter positions and masks here derive from the
+        ``start`` argument, never from ctx, and ctx is reset absolutely to
+        ``start + S`` on exit.
+        """
+        cfg = self.cfg
+        assert all(ld.mixer == "attn" for ld in self.pattern), \
+            "paged chunked prefill supports attention stacks"
+        from repro.kernels.paged_attention.ops import paged_prefill_attention
+        from repro.models.blocks import rope
+        x = self.embed(params, tokens[None, :], prefix_embeds)   # [1, S, D]
+        s = x.shape[1]
+        pos = start + jnp.arange(s, dtype=jnp.int32)             # [S]
+        page = state["pool_k"].shape[2]
+        pt_row = state["page_table"][slot]                       # [N]
+        pg = pt_row[pos // page]                                 # [S]
+        off = pos % page
+        ctx_end = jnp.full((1,), start + s, jnp.int32)
+
+        if fetch is None:
+            def fetch(r):
+                return jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, r, keepdims=False),
+                    params["blocks"])
+
+        def body(x, xs):
+            pool_k, pool_v, r = xs
+            (p,) = fetch(r)
+            attn = MIXERS["attn"]
+            h = rms_norm(x, p["norm1"], cfg.norm_eps)
+            q, k_new, v_new = attn._qkv(p["mixer"], h, cfg)      # [1,S,H,hd]
+            q = rope(q, pos[None], cfg.rope_theta)
+            k_new = rope(k_new, pos[None], cfg.rope_theta)
+            pool_k = pool_k.at[pg, off].set(k_new[0])
+            pool_v = pool_v.at[pg, off].set(v_new[0])
+            out = paged_prefill_attention(
+                q, pool_k, pool_v, pt_row[None],
+                jnp.full((1,), start, jnp.int32), ctx_end,
+                window=cfg.sliding_window)
+            y = _einsum("bshk,hkd->bsd", out, p["mixer"]["wo"]).astype(x.dtype)
+            x = x + y
+            if self.pattern[0].ffn == "dense":
+                x = x + _SWIGLU(p["ffn"], rms_norm(x, p["norm2"], cfg.norm_eps))
+            elif self.pattern[0].ffn == "moe":
+                h2, _ = _MOE(p["ffn"], rms_norm(x, p["norm2"], cfg.norm_eps), cfg)
+                x = x + h2
+            return x, (pool_k, pool_v)
+
+        x, (pk, pv) = jax.lax.scan(
+            body, x,
+            (state["pool_k"], state["pool_v"], jnp.arange(self.repeats)))
+        logits = self.logits_last(params, x[:, -1])
+        new_state = dict(
+            state, pool_k=pk, pool_v=pv,
+            ctx=state["ctx"].at[slot].set(start + s))
+        return logits[0], new_state
+
     def paged_state_from_prefill(self, caches, lengths, page_tables,
                                  num_pages: int, page_size: int,
                                  pool_k=None, pool_v=None):

@@ -39,8 +39,48 @@ from repro.models import build_model
 from repro.models.common import tree_bytes
 from repro.serving.hw import HardwareSpec, TPU_V5E
 from repro.serving.perf_model import PerfModel
-from repro.serving.request import Request, ServingMetrics
+from repro.serving.request import (
+    DECODE_WATERMARK_TOKENS, Request, ServingMetrics,
+)
 from repro.serving.scheduler import make_scheduler
+
+
+def execute_remap_decision(allocator, store, elastic_pages, d, *,
+                           drop_cached=None) -> Optional[str]:
+    """Execute one ``RemapDecision`` against the paged pool; shared by the
+    engine and the controller-fuzz harness so the pool-side invariant is
+    testable without tenants. Returns ``"remap"`` / ``"revert"`` when the
+    decision took effect, ``"undone"`` when a doomed reversion was rolled
+    back in the store, and ``None`` when the decision was a no-op at page
+    granularity (e.g. a revert whose pages were already over-released by
+    an earlier whole-segment shrink).
+
+    Invariant maintained (asserted by tests after every decision):
+    ``elastic_pages[m] == sum of segment pages sourced by m``. The undo
+    path must NOT shrink-then-regrow: regrowing mints fresh page ids while
+    ``total_pages`` stays put, drifting the segment map away from the
+    accounting and leaking ids past any pool sized from it.
+    """
+    info = store.models[d.model]
+    target_pages = d.new_alpha * (info.layer_bytes // store.memory.page_bytes)
+    cur = elastic_pages[d.model]
+    if target_pages > cur:
+        allocator.grow(target_pages - cur, d.model)
+        elastic_pages[d.model] = target_pages
+        return "remap"
+    if target_pages < cur:
+        # cached prefix blocks parked in the donated segments would block
+        # reversion forever; drop the unreferenced ones first
+        if drop_cached is not None:
+            drop_cached(d.model)
+        if allocator.releasable_pages(d.model) < cur - target_pages:
+            # pages still in use: undo the reversion (retry later)
+            store.apply_remap(d.model, d.new_alpha + 1)
+            return "undone"
+        released = allocator.shrink(d.model)
+        elastic_pages[d.model] = cur - released
+        return "revert"
+    return None
 
 
 @dataclasses.dataclass
@@ -112,6 +152,17 @@ class Tenant:
             self.state, pool_k=grow(self.state["pool_k"]),
             pool_v=grow(self.state["pool_v"]), page_table=pt)
 
+    def page_row(self, pages) -> np.ndarray:
+        """Scratch-padded page-table row: ``pages`` first, every other
+        entry the scratch page. THE one encoding of the slot-lifecycle
+        invariant (unused entries must absorb writes harmlessly) — all
+        row installs and resets go through here."""
+        scratch = self.state["pool_k"].shape[1] - 1
+        n = self.state["page_table"].shape[1]
+        row = np.full((n,), scratch, np.int32)
+        row[:len(pages)] = pages
+        return row
+
     # ------------------------------------------------------------- batching
     def free_slot(self) -> Optional[int]:
         for i, r in enumerate(self.slots):
@@ -127,7 +178,20 @@ class Tenant:
         self.state = self.model.insert_slot(self.state, slot, new_state)
 
     def clear_slot(self, slot: int) -> None:
+        """Release a batch slot. For paged tenants the slot's page-table
+        row and write cursor MUST be reset: the freed pages may be handed
+        to another request immediately, and a stale row would make every
+        subsequent ``decode_step_paged`` write the dead slot's garbage KV
+        into pages the survivor now owns (the slot-lifecycle invariant:
+        an empty slot always points at the scratch page with ctx == 0)."""
         self.slots[slot] = None
+        if self.paged and self.state is not None:
+            self.state = dict(
+                self.state,
+                page_table=self.state["page_table"].at[slot].set(
+                    jnp.asarray(self.page_row([]))),
+                ctx=self.state["ctx"].at[slot].set(0),
+            )
 
 
 class ServingEngine:
@@ -143,11 +207,25 @@ class ServingEngine:
         runtime: RuntimeConfig = RuntimeConfig(),
         quantum_steps: int = 8,
         prefix_sharing: bool = False,
+        prefill_chunk_tokens: int = 0,
+        step_tokens: int = 0,
+        watermark_tokens: int = DECODE_WATERMARK_TOKENS,
     ):
+        """``prefill_chunk_tokens``: > 0 enables token-budget chunked
+        prefill for paged tenants — an admitted prompt is computed in
+        chunks of at most this many tokens per engine step, interleaved
+        with decode of the other slots (0 = monolithic prefill, the
+        original behaviour). ``step_tokens``: scheduler-visible per-step
+        token budget; decode tokens are charged first, prefill chunks
+        consume the remainder (0 = unlimited). ``watermark_tokens``:
+        decode headroom reserved per running request at admission, shared
+        with the simulator via ``DECODE_WATERMARK_TOKENS``."""
         assert mode in ("mirage", "vllm", "swap")
         self.mode = mode
         self.hw = hw
         self.runtime = runtime
+        self.prefill_chunk_tokens = int(prefill_chunk_tokens)
+        self.watermark_tokens = int(watermark_tokens)
         self.tenants = {n: Tenant(n, tc, hw) for n, tc in tenants.items()}
         self.allocator = PagedKVAllocator(base_kv_pages, page_size)
         self.store = MetadataStore(MemoryInfo(
@@ -173,8 +251,10 @@ class ServingEngine:
             {n: t.perf.t_transfer_unit for n, t in self.tenants.items()},
         )
         self.scheduler = make_scheduler(
-            scheduler, list(self.tenants), quantum_steps=quantum_steps) \
-            if scheduler == "temporal" else make_scheduler(scheduler, list(self.tenants))
+            scheduler, list(self.tenants), quantum_steps=quantum_steps,
+            step_tokens=step_tokens) \
+            if scheduler == "temporal" else make_scheduler(
+                scheduler, list(self.tenants), step_tokens=step_tokens)
         self.step_idx = 0
         self.finished: List[Request] = []
         self.events: List[Tuple[int, str, str]] = []   # (step, kind, detail)
@@ -218,10 +298,19 @@ class ServingEngine:
         active = self.scheduler.schedule(pending, running, now)
         self.store.mark_active(active)
         self.store.note_kv_usage(self.allocator.used_pages)
-        # 3. per active tenant: admit prefills, then decode one token
+        # 3. per active tenant: admit prefills, run prefill chunks under
+        # the scheduler's token budget, then decode one token
         pressure = False
         for name in active:
             pressure |= self._admit(self.tenants[name])
+        # decode tokens are charged against the step budget first so a
+        # chunking tenant can never starve decode-heavy tenants
+        decode_tokens = sum(
+            1 for name in active for r in self.tenants[name].running()
+            if not r.prefilling)
+        budget = self.scheduler.prefill_budget(decode_tokens)
+        for name in active:
+            budget -= self._prefill_step(self.tenants[name], budget)
         for name in active:
             pressure |= self._decode(self.tenants[name])
         # 4. MIRAGE / baseline memory management
@@ -229,12 +318,19 @@ class ServingEngine:
 
     # ------------------------------------------------------------- internals
     def _t_compute(self) -> Dict[str, float]:
+        """Per-model T_c fed to the controller's pipeline-feasibility cap
+        (§5.3). Uses the LIVE mean context of the running batch — a fixed
+        ``max_context / 2`` guess would freeze the α cap while contexts
+        grow and decode actually slows down."""
         out = {}
         for n, t in self.tenants.items():
-            batch = max(len(t.running()), 1)
+            running = t.running()
+            batch = max(len(running), 1)
             info = self.store.models[n]
             if info.active:
-                out[n] = t.perf.decode_step_time(batch, t.max_context / 2) \
+                ctx = (sum(r.total_len for r in running) / len(running)) \
+                    if running else t.max_context / 2
+                out[n] = t.perf.decode_step_time(batch, ctx) \
                     / t.model.repeats
             else:
                 out[n] = t.perf.prefill_time(512) / t.model.repeats
@@ -246,6 +342,9 @@ class ServingEngine:
         if self.mode == "swap":
             if pressure:
                 seg = self.allocator.grow(16, "host-swap")
+                for t in self.tenants.values():
+                    if t.paged:
+                        t.grow_pool(self.allocator.page_id_bound)
                 self.events.append((self.step_idx, "swap-grow", f"{seg.num_pages}"))
             return
         decisions = self.controller.step(
@@ -253,42 +352,28 @@ class ServingEngine:
         for d in decisions:
             self._apply_decision(d)
 
+    def _drop_cached_in_segments(self, model: str) -> None:
+        cand = [p for seg in self.allocator.segments
+                if seg.source == model
+                for p in self.allocator.segment_cached(seg)]
+        for idx in self.prefix.values():
+            dropped = idx.evict_pages(cand, evictable=self._cache_only)
+            if dropped:
+                self.allocator.cache_drop(dropped)
+
     def _apply_decision(self, d: RemapDecision) -> None:
-        info = self.store.models[d.model]
-        target_pages = d.new_alpha * (
-            info.layer_bytes // self.store.memory.page_bytes)
-        cur = self._elastic_pages[d.model]
-        if target_pages > cur:
-            self.allocator.grow(target_pages - cur, d.model)
-            self._elastic_pages[d.model] = target_pages
-            self.xfer.apply_plan(d.model, d.plan)
+        outcome = execute_remap_decision(
+            self.allocator, self.store, self._elastic_pages, d,
+            drop_cached=self._drop_cached_in_segments if self.prefix else None)
+        if outcome not in ("remap", "revert"):
+            return
+        self.xfer.apply_plan(d.model, d.plan)
+        if outcome == "remap":
             for t in self.tenants.values():     # donated memory becomes pages
                 if t.paged:
-                    t.grow_pool(self.allocator.total_pages)
-            self.events.append(
-                (self.step_idx, "remap", f"{d.model} a={d.new_alpha}"))
-        elif target_pages < cur:
-            # cached prefix blocks parked in the donated segments would
-            # block reversion forever; drop the unreferenced ones first
-            if self.prefix:
-                cand = [p for seg in self.allocator.segments
-                        if seg.source == d.model
-                        for p in self.allocator.segment_cached(seg)]
-                for idx in self.prefix.values():
-                    dropped = idx.evict_pages(cand, evictable=self._cache_only)
-                    if dropped:
-                        self.allocator.cache_drop(dropped)
-            released = self.allocator.shrink(d.model)
-            if released < cur - target_pages:
-                # pages still in use: undo the reversion (retry later)
-                self.store.apply_remap(d.model, d.new_alpha + 1)
-                if released:
-                    self.allocator.grow(released, d.model)
-                return
-            self._elastic_pages[d.model] = cur - released
-            self.xfer.apply_plan(d.model, d.plan)
-            self.events.append(
-                (self.step_idx, "revert", f"{d.model} a={d.new_alpha}"))
+                    t.grow_pool(self.allocator.page_id_bound)
+        self.events.append(
+            (self.step_idx, outcome, f"{d.model} a={d.new_alpha}"))
 
     # -------------------------------------------------------------- prefill
     def _admit(self, t: Tenant) -> bool:
@@ -321,10 +406,12 @@ class ServingEngine:
                                   record=False)
                 idx.acquire(match.nodes)
             matched_pages = len(match.pages) if match else 0
-            # vLLM-style admission watermark: keep one page of headroom per
+            # vLLM-style admission watermark: keep decode headroom per
             # running request so decode can always progress (no admission
-            # thrash); applies to every mode.
-            reserve = sum(len(x.running()) for x in self.tenants.values())
+            # thrash); applies to every mode. One shared knob with the
+            # simulator: DECODE_WATERMARK_TOKENS.
+            reserve = sum(len(x.running()) for x in self.tenants.values()) \
+                * self.allocator.pages_needed(self.watermark_tokens)
             need = self.allocator.pages_needed(r.prompt_len + 1) \
                 - matched_pages + reserve
             if need > self.allocator.free_pages:
@@ -355,7 +442,15 @@ class ServingEngine:
                 r.rid, r.prompt_len + 1 - (match.tokens if match else 0)
             ) is not None
             t.queue.popleft()
-            self._prefill(t, r, slot)
+            # chunked prefill needs the paged pool to hold partial-prompt
+            # KV between steps; multimodal prefixes (patch embeds / audio
+            # frames) shift positions and keep the monolithic path.
+            if t.paged and self.prefill_chunk_tokens > 0 \
+                    and not t.cfg.num_image_patches \
+                    and not t.cfg.is_encoder_decoder:
+                self._begin_chunked_prefill(t, r, slot)
+            else:
+                self._prefill(t, r, slot)
         return pressure
 
     def _cache_only(self, p: int) -> bool:
@@ -422,17 +517,13 @@ class ServingEngine:
         logits = lm.logits_last(t.params, xo[:, -1])
         pages = self.allocator.seq_pages[r.rid]
         page_size = self.allocator.page_size
-        scratch = t.state["pool_k"].shape[1] - 1
-        n = t.state["page_table"].shape[1]
-        pt_row = np.full((n,), scratch, np.int32)
-        pt_row[:len(pages)] = pages
+        pt_row = t.page_row(pages)
         shared = self.allocator.seq_shared.get(r.rid, 0)
         if shared:
             m = shared * page_size
             caches = ({"k": caches[0]["k"][:, :, m:],
                        "v": caches[0]["v"][:, :, m:]},)
-            scat_row = np.full((n,), scratch, np.int32)
-            scat_row[:len(pages) - shared] = pages[shared:]
+            scat_row = t.page_row(pages[shared:])
         else:
             scat_row = pt_row
         st1 = lm.paged_state_from_prefill(
@@ -447,6 +538,56 @@ class ServingEngine:
         )
         self._publish(t, r, np.asarray(r.prompt))
         return logits
+
+    # ----------------------------------------------------- chunked prefill
+    def _begin_chunked_prefill(self, t: Tenant, r: Request, slot: int) -> None:
+        """Admit ``r`` into ``slot`` without running any compute yet: pages
+        are already allocated for the full prompt (+1 decode token), the
+        slot's page-table row is installed, and the write cursor starts at
+        the CoW-shared prefix (those pages already hold this prefix's KV).
+        ``_prefill_step`` then advances the prompt in bounded chunks."""
+        t.slots[slot] = r
+        r.slot = slot
+        r.prefilling = True
+        r.prefill_pos = self.allocator.seq_shared.get(r.rid, 0) \
+            * self.allocator.page_size
+        row = t.page_row(self.allocator.seq_pages[r.rid])
+        t.state = dict(
+            t.state,
+            page_table=t.state["page_table"].at[slot].set(jnp.asarray(row)),
+            ctx=t.state["ctx"].at[slot].set(r.prefill_pos),
+        )
+
+    def _prefill_step(self, t: Tenant, budget: int) -> int:
+        """Advance every prefilling request of ``t`` by one chunk of at
+        most ``prefill_chunk_tokens`` (and at most the remaining scheduler
+        token budget). Returns the prompt tokens consumed. A request whose
+        last chunk completes emits its first token here and — since
+        ``_decode`` runs after this in the same ``step()`` with
+        ``prefilling`` now cleared — decodes its second token in the same
+        step, exactly like the monolithic path (prefill + first decode in
+        one step); that same-step decode is required for bit-identity."""
+        spent = 0
+        for r in [x for x in t.slots if x is not None and x.prefilling]:
+            chunk = min(self.prefill_chunk_tokens, budget - spent,
+                        r.prompt_len - r.prefill_pos)
+            if chunk <= 0:
+                continue
+            tokens = jnp.asarray(
+                r.prompt[r.prefill_pos:r.prefill_pos + chunk])
+            logits, t.state = t.model.impl.prefill_chunk_paged(
+                t.params, t.state, r.slot, tokens, r.prefill_pos)
+            r.prefill_pos += chunk
+            spent += chunk
+            if r.prefill_pos >= r.prompt_len:
+                r.prefilling = False
+                tok = int(jnp.argmax(logits))
+                r.generated.append(tok)
+                r.t_first_token = float(self.step_idx)
+                r.token_times.append(float(self.step_idx))
+                self._publish(t, r, np.asarray(r.prompt))
+                self.events.append((self.step_idx, "prefill", r.rid))
+        return spent
 
     def _publish(self, t: Tenant, r: Request, tokens: np.ndarray) -> None:
         """Register this request's fully written KV pages in the prefix
@@ -469,7 +610,9 @@ class ServingEngine:
 
     # --------------------------------------------------------------- decode
     def _decode(self, t: Tenant) -> bool:
-        reqs = t.running()
+        # mid-prefill slots hold no decodable token yet: they are skipped
+        # here and advanced by _prefill_step instead
+        reqs = [r for r in t.running() if not r.prefilling]
         if not reqs:
             return False
         pressure = False
@@ -499,7 +642,7 @@ class ServingEngine:
                     if self.allocator.allocate(r.rid, 1) is not None:
                         continue
                     self._preempt(r)
-        reqs = t.running()
+        reqs = [r for r in t.running() if not r.prefilling]
         if not reqs:
             return pressure
         tokens = np.zeros((t.max_batch,), np.int32)
@@ -508,13 +651,9 @@ class ServingEngine:
         if t.paged:
             # per-token page allocations land in the allocator; sync the
             # running slots' page-table rows before the step
-            scratch = t.state["pool_k"].shape[1] - 1
             pt = np.asarray(t.state["page_table"]).copy()
             for r in reqs:
-                pages = self.allocator.seq_pages[r.rid]
-                row = np.full((pt.shape[1],), scratch, np.int32)
-                row[:len(pages)] = pages
-                pt[r.slot] = row
+                pt[r.slot] = t.page_row(self.allocator.seq_pages[r.rid])
             t.state = dict(t.state, page_table=jnp.asarray(pt))
         remapped = self.store.models[t.name].remapped_alpha > 0
         if remapped:
@@ -590,6 +729,10 @@ class ServingEngine:
             [r.prompt, np.asarray(r.generated, np.int32)])
         r.generated = []
         r.slot = -1
+        # a mid-prefill victim restarts its prompt from scratch (the
+        # partially scattered KV died with its pages)
+        r.prefilling = False
+        r.prefill_pos = 0
         t.queue.appendleft(r)
         self.events.append((self.step_idx, "preempt", r.rid))
 

@@ -6,6 +6,13 @@ from typing import List, Optional
 
 import numpy as np
 
+# Admission watermark: tokens of decode headroom reserved per running
+# request so decode can always progress without admission thrash. The ONE
+# shared knob behind both runtimes: the engine reserves
+# ``pages_needed(DECODE_WATERMARK_TOKENS)`` allocator pages per running
+# request, the simulator charges the same number of KV-token bytes.
+DECODE_WATERMARK_TOKENS = 32
+
 
 @dataclasses.dataclass
 class Request:
@@ -24,6 +31,11 @@ class Request:
     preemptions: int = 0               # vLLM-baseline recompute evictions
     prefix_matched_tokens: int = 0     # prefill tokens served from the cache
     #                                    (accumulated across re-admissions)
+    # chunked prefill: tokens already computed + scattered into the paged
+    # pool (includes any CoW-shared prefix). prefilling=True while the
+    # request owns a batch slot but has not yet emitted its first token.
+    prefill_pos: int = 0
+    prefilling: bool = False
 
     @property
     def prompt_len(self) -> int:
@@ -65,7 +77,12 @@ class ServingMetrics:
     prefix_hit_rate: float = 0.0       # saved / total prompt tokens
 
     @staticmethod
-    def from_requests(reqs: List[Request], makespan: float) -> "ServingMetrics":
+    def from_requests(reqs: List[Request], makespan: float,
+                      model: Optional[str] = None) -> "ServingMetrics":
+        """Aggregate over ``reqs`` (optionally one tenant's slice — the
+        interference benchmarks report the victim tenant's tail alone)."""
+        if model is not None:
+            reqs = [r for r in reqs if r.model == model]
         ttfts = [r.ttft() for r in reqs if r.ttft() is not None]
         tbts = [t for r in reqs for t in r.tbts()]
         tokens = sum(len(r.generated) for r in reqs)

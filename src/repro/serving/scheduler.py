@@ -12,9 +12,22 @@ from typing import Dict, List, Optional, Sequence
 
 
 class Scheduler:
+    # per-iteration token budget shared by every tenant scheduled this
+    # step (0 = unlimited). Decode tokens are charged first; chunked
+    # prefill consumes only the remainder — a tenant mid-way through a
+    # long prompt can therefore never starve decode-heavy tenants.
+    step_tokens: int = 0
+
     def schedule(self, pending: Dict[str, int], running: Dict[str, int],
                  now: float) -> List[str]:
         raise NotImplementedError
+
+    def prefill_budget(self, decode_tokens: int) -> int:
+        """Prompt tokens the engine may prefill this iteration, after the
+        step's ``decode_tokens`` (one per decoding request) are served."""
+        if self.step_tokens <= 0:
+            return 1 << 30
+        return max(self.step_tokens - decode_tokens, 0)
 
 
 @dataclasses.dataclass
@@ -33,6 +46,7 @@ class TemporalScheduler(Scheduler):
     """
     models: Sequence[str]
     quantum_steps: int = 32
+    step_tokens: int = 0
     _current: int = -1
     _steps_left: int = 0
 
@@ -58,6 +72,7 @@ class TemporalScheduler(Scheduler):
 class SpatialScheduler(Scheduler):
     """All models run concurrently (MPS/MIG-like); each gets every step."""
     models: Sequence[str]
+    step_tokens: int = 0
 
     def schedule(self, pending, running, now) -> List[str]:
         return [m for m in self.models
@@ -68,5 +83,5 @@ def make_scheduler(kind: str, models: Sequence[str], **kw) -> Scheduler:
     if kind == "temporal":
         return TemporalScheduler(models, **kw)
     if kind == "spatial":
-        return SpatialScheduler(models)
+        return SpatialScheduler(models, step_tokens=kw.get("step_tokens", 0))
     raise ValueError(f"unknown scheduler {kind!r}")

@@ -33,7 +33,9 @@ from repro.core import (
 )
 from repro.serving.hw import HardwareSpec, GH200
 from repro.serving.perf_model import PerfModel, kv_bytes_per_token
-from repro.serving.request import Request, ServingMetrics
+from repro.serving.request import (
+    DECODE_WATERMARK_TOKENS, Request, ServingMetrics,
+)
 from repro.serving.scheduler import make_scheduler
 
 
@@ -56,6 +58,10 @@ class SimTenant:
             self.reserved_bytes - self.perf.param_bytes, 0)
         self.queue: deque = deque()
         self.running: List[Request] = []
+        # admitted requests whose prompt is still being computed in chunks
+        # (chunked prefill); their KV bytes are reserved up front, exactly
+        # like the engine allocating the full prompt's pages at admission
+        self.prefilling: List[Request] = []
         self.kv_token_bytes = max(kv_bytes_per_token(tc.cfg), 1)
         self.needs_reload = 0.0    # pending cold-start reload seconds
         # prefix sharing (block-granular; virtual page handles)
@@ -73,9 +79,11 @@ class SimTenant:
 
     def kv_used(self) -> int:
         """Device KV bytes: each request's private tokens (suffix + decode)
-        plus the deduplicated cached blocks, counted once."""
+        plus the deduplicated cached blocks, counted once. Prefilling
+        requests count in full — their pages are reserved at admission."""
         private = sum((r.total_len - self._shared.get(r.rid, 0))
-                      * self.kv_token_bytes for r in self.running)
+                      * self.kv_token_bytes
+                      for r in self.running + self.prefilling)
         return private + self.cache_bytes()
 
     def cache_reclaim(self, bytes_needed: int) -> int:
@@ -108,11 +116,16 @@ class Simulator:
         seed: int = 0,
         prefix_sharing: bool = False,
         prefix_page: int = 32,            # tokens per shared KV block
+        prefill_chunk_tokens: int = 0,    # 0 = monolithic prefill
+        step_tokens: int = 0,             # scheduler token budget (0 = inf)
+        watermark_tokens: int = DECODE_WATERMARK_TOKENS,
     ):
         assert mode in ("mirage", "vllm", "swap")
         self.mode = mode
         self.hw = hw
         self.uniform_selection = uniform_selection
+        self.prefill_chunk_tokens = int(prefill_chunk_tokens)
+        self.watermark_tokens = int(watermark_tokens)
         self.tenants = {
             n: SimTenant(n, tc, hw,
                          prefix_page=prefix_page if prefix_sharing else 0)
@@ -137,9 +150,12 @@ class Simulator:
             {n: t.perf.t_transfer_unit for n, t in self.tenants.items()},
         )
         self.scheduler = make_scheduler(
-            scheduler, list(self.tenants), quantum_steps=quantum_steps) \
-            if scheduler == "temporal" else make_scheduler(scheduler, list(self.tenants))
+            scheduler, list(self.tenants), quantum_steps=quantum_steps,
+            step_tokens=step_tokens) \
+            if scheduler == "temporal" else make_scheduler(
+                scheduler, list(self.tenants), step_tokens=step_tokens)
         self.now = 0.0
+        self._prefill_budget = 0       # per-iteration, shared by tenants
         self.finished: List[Request] = []
         self.host_link_busy_s = 0.0
         self.swap_overflow_peak = 0
@@ -150,17 +166,19 @@ class Simulator:
         idle_guard = 0
         no_progress = 0
         tokens_done = -1
-        while (incoming or any(t.queue or t.running
+        while (incoming or any(t.queue or t.running or t.prefilling
                                for t in self.tenants.values())):
             # starvation guard: a head request that can never fit (tenant
             # mis-sized for vllm mode) is dropped as failed after a bound
             tok_now = sum(len(r.generated) for t in self.tenants.values()
-                          for r in t.running) + len(self.finished)
+                          for r in t.running) + len(self.finished) \
+                + sum(r.prompt_len - r._prefill_left
+                      for t in self.tenants.values() for r in t.prefilling)
             no_progress = no_progress + 1 if tok_now == tokens_done else 0
             tokens_done = tok_now
             if no_progress > 10_000:
                 for t in self.tenants.values():
-                    if t.queue and not t.running:
+                    if t.queue and not t.running and not t.prefilling:
                         r = t.queue.popleft()
                         r.finished = True
                         self.finished.append(r)
@@ -172,7 +190,8 @@ class Simulator:
                 r = incoming.popleft()
                 self.tenants[r.model].queue.append(r)
             pending = {n: len(t.queue) for n, t in self.tenants.items()}
-            running = {n: len(t.running) for n, t in self.tenants.items()}
+            running = {n: len(t.running) + len(t.prefilling)
+                       for n, t in self.tenants.items()}
             active = self.scheduler.schedule(pending, running, self.now)
             self.store.mark_active(active)
             if not active:
@@ -183,6 +202,11 @@ class Simulator:
                 continue
             idle_guard = 0
             self._sync_memory()
+            # ONE shared prefill budget per iteration (mirrors the
+            # engine): decode tokens of the active tenants are charged
+            # first, every tenant's chunks then drain the remainder
+            self._prefill_budget = self.scheduler.prefill_budget(
+                sum(len(self.tenants[n].running) for n in active))
             dt = 0.0
             if self.scheduler.__class__.__name__ == "SpatialScheduler":
                 # concurrent tenants: iteration time = max over tenants
@@ -209,13 +233,13 @@ class Simulator:
     def _tenant_iteration(self, t: SimTenant) -> float:
         dt = 0.0
         dt += self._admit(t)
+        dt += self._prefill_step(t)
         dt += self._decode(t)
         return dt
 
     def _admit(self, t: SimTenant) -> float:
         dt = 0.0
-        admitted_tokens = 0
-        while t.queue and len(t.running) < t.max_batch:
+        while t.queue and len(t.running) + len(t.prefilling) < t.max_batch:
             r = t.queue[0]
             # longest cached prefix: those tokens neither occupy new KV
             # bytes nor cost prefill FLOPs (at least one token always
@@ -227,9 +251,12 @@ class Simulator:
                 # pin the path so our own reclaim below can't evict it
                 t.index.acquire(match.nodes)
             matched = match.tokens if match else 0
-            # vLLM-style watermark: leave decode headroom per running request
-            # so admission can never thrash against decode preemptions.
-            headroom = 32 * len(t.running) * t.kv_token_bytes
+            # vLLM-style watermark: leave decode headroom per occupied slot
+            # (mid-prefill requests will decode soon) so admission can
+            # never thrash against decode preemptions. One shared knob
+            # with the engine: DECODE_WATERMARK_TOKENS.
+            headroom = self.watermark_tokens \
+                * (len(t.running) + len(t.prefilling)) * t.kv_token_bytes
             need = (r.total_len - matched + 1) * t.kv_token_bytes + headroom
             if t.kv_used() + need > self._capacity(t):
                 t.cache_reclaim(t.kv_used() + need - self._capacity(t))
@@ -241,22 +268,61 @@ class Simulator:
                         t.index.release(match.nodes)
                     break
             t.queue.popleft()
-            t.running.append(r)
             if match is not None:
                 t.index.record_lookup(matched, r.prompt_len)
                 t._paths[r.rid] = list(match.nodes)
                 t._shared[r.rid] = matched
                 r.prefix_matched_tokens += matched
-            admitted_tokens += r.prompt_len - matched
-            tp = t.perf.prefill_time(r.prompt_len - matched)
             # cold-start reload of remapped layers overlaps prefill (§5.3)
             alpha = self.store.models[t.name].remapped_alpha
             reload = t.perf.reload_time(alpha) if alpha else 0.0
+            if self.prefill_chunk_tokens > 0:
+                # chunked: admission reserves capacity only; the prompt is
+                # computed by _prefill_step in bounded chunks interleaved
+                # with decode iterations (reload overlaps the first chunk)
+                r._prefill_left = r.prompt_len - matched
+                r._reload_pending = reload
+                t.prefilling.append(r)
+                continue
+            t.running.append(r)
+            tp = t.perf.prefill_time(r.prompt_len - matched)
             dt += max(tp, reload)
             now = self.now + dt
             r.t_first_token = now
             r.generated.append(0)
             r.token_times.append(now)
+        return dt
+
+    def _prefill_step(self, t: SimTenant) -> float:
+        """One bounded prefill chunk per prefilling request, mirroring the
+        engine's state machine: the iteration charges chunk-sized compute
+        instead of a whole prompt, so decode iterations of other requests
+        (and, via the global clock, other tenants) interleave — the
+        head-of-line blocking a monolithic prefill inflicts on tail TBT is
+        bounded by the chunk budget."""
+        if not t.prefilling:
+            return 0.0
+        dt = 0.0
+        for r in list(t.prefilling):
+            chunk = min(self.prefill_chunk_tokens, self._prefill_budget,
+                        r._prefill_left)
+            if chunk <= 0:
+                continue
+            self._prefill_budget -= chunk
+            step = t.perf.prefill_time(chunk)
+            reload = getattr(r, "_reload_pending", 0.0)
+            if reload:
+                step = max(step, reload)
+                r._reload_pending = 0.0
+            dt += step
+            r._prefill_left -= chunk
+            if r._prefill_left <= 0:
+                t.prefilling.remove(r)
+                t.running.append(r)
+                now = self.now + dt
+                r.t_first_token = now
+                r.generated.append(0)
+                r.token_times.append(now)
         return dt
 
     def _decode(self, t: SimTenant) -> float:

@@ -143,6 +143,51 @@ def multi_turn_trace(specs: Sequence[ConversationSpec],
     return reqs
 
 
+# ------------------------------------------- long-prompt vs chat interference
+def interference_trace(
+    long_model: str,
+    chat_model: str,
+    *,
+    n_long: int = 64,
+    long_prompt: int = 8192,
+    long_new: int = 8,
+    n_chat: int = 48,
+    chat_prompt: int = 128,
+    chat_new: int = 192,
+    duration: float = 24.0,
+    jitter: float = 0.0,
+    vocab: int = 32000,
+    seed: int = 0,
+) -> List[Request]:
+    """Head-of-line interference workload for chunked prefill: one tenant
+    streams long prompts back-to-back (near-saturated with prefill work),
+    another serves steady decode-heavy chat traffic. With monolithic
+    prefill every long admission stalls the shared iteration clock for a
+    full ``prefill(long_prompt)``, which lands squarely on the chat
+    tenant's tail TBT once the long tenant's prefill duty cycle makes
+    those stalls more frequent than 1 in 100 chat tokens. Chunked prefill
+    bounds each stall at ``prefill(chunk)``. Per-role RNG streams (same
+    seed-stability contract as ``make_trace``)."""
+    reqs: List[Request] = []
+    for role, (model, n, p_len, m_new) in enumerate([
+            (long_model, n_long, long_prompt, long_new),
+            (chat_model, n_chat, chat_prompt, chat_new)]):
+        rng = np.random.default_rng([seed, 2 << 16, role])
+        for i in range(n):
+            arrival = duration * i / n
+            if jitter:
+                arrival += rng.uniform(0, jitter)
+            reqs.append(Request(
+                rid=f"{model}-{'long' if role == 0 else 'chat'}-{i}",
+                model=model,
+                prompt=rng.integers(0, vocab, p_len).astype(np.int32),
+                max_new_tokens=m_new,
+                arrival=float(arrival),
+            ))
+    reqs.sort(key=lambda r: r.arrival)
+    return reqs
+
+
 def tiny_trace(models: Sequence[str], n_per_model: int = 4,
                prompt_len: int = 8, max_new: int = 6, vocab: int = 256,
                spacing: float = 0.01, seed: int = 0) -> List[Request]:

@@ -1,12 +1,49 @@
 """Controller fuzzing: under arbitrary pressure/calm sequences and compute
 profiles, Algorithm 1 must keep its invariants — α within caps, memory
-accounting consistent, reversion only when calm, plans always valid."""
+accounting consistent, reversion only when calm, plans always valid.
+
+The fuzz now also EXECUTES every decision against a real PagedKVAllocator
+through the engine's ``execute_remap_decision`` (with random request
+allocations pinning segments), asserting the pool-side invariant after
+every decision: ``elastic_pages[m] == pages in segments sourced by m`` and
+no page id ever escapes ``page_id_bound`` (regression: the old
+reversion-undo path shrank then re-grew, minting fresh ids while the
+accounting kept the stale count)."""
+import numpy as np
 from hypcompat import given, settings, st
 
 from repro.core import (
     ControllerConfig, MemoryInfo, MetadataStore, ModelInfo,
-    RemappingController, min_circular_gap,
+    PagedKVAllocator, RemappingController, min_circular_gap,
 )
+from repro.serving.engine import execute_remap_decision
+
+
+def _churn(alloc: PagedKVAllocator, rng, live: list) -> None:
+    """Randomly allocate/free request pages so donated segments are
+    sometimes pinned when a reversion arrives (the undo path)."""
+    op = rng.integers(0, 3)
+    if op < 2 and alloc.free_pages > 0:          # bias toward allocation
+        rid = f"r{rng.integers(1 << 30)}"
+        if alloc.allocate(rid, int(rng.integers(1, 5))) is not None:
+            live.append(rid)
+    elif live:
+        alloc.free(live.pop(int(rng.integers(len(live)))))
+
+
+def _assert_pool_invariants(alloc, elastic, store, pages_per_unit):
+    per = {m: 0 for m in elastic}
+    for seg in alloc.segments:
+        if seg.source in per:
+            per[seg.source] += seg.num_pages
+    assert per == elastic, (per, elastic)
+    assert alloc.check_invariants() is None
+    # no minted id may escape the bound pools are sized from
+    assert all(seg.end <= alloc.page_id_bound for seg in alloc.segments)
+    # store-side accounting mirrors α (undo restores it exactly)
+    expect = sum(m.remapped_alpha * pages_per_unit
+                 for m in store.models.values())
+    assert store.memory.elastic_kv_pages == expect
 
 
 @settings(max_examples=40, deadline=None)
@@ -40,10 +77,16 @@ def test_controller_invariants_under_fuzz(
                          revert_patience=2, reversion_hysteresis=0.05),
         {n: 0.5 for n in names})
 
+    rng = np.random.default_rng(seed)
+    alloc = PagedKVAllocator(32, page_size=1)
+    elastic = {n: 0 for n in names}
+    live_rids: list = []
+
     pages_per_unit = layer_bytes // page_bytes
     for pressure, active_i, tc in steps:
         active = [names[active_i % n_models]]
         store.mark_active(active)
+        _churn(alloc, rng, live_rids)
         used = 0 if not pressure else store.memory.total_pages
         store.note_kv_usage(used)
         decisions = ctrl.step(
@@ -65,6 +108,15 @@ def test_controller_invariants_under_fuzz(
             # reversion only when not under pressure
             if d.reverted:
                 assert not pressure
+            # execute against the pool; the invariant must hold after
+            # EVERY decision, including undone reversions
+            outcome = execute_remap_decision(alloc, store, elastic, d)
+            if outcome == "undone":
+                # undo restored α: pinned segments stay donated
+                assert d.reverted
+                assert store.models[d.model].remapped_alpha == \
+                    d.new_alpha + 1
+            _assert_pool_invariants(alloc, elastic, store, pages_per_unit)
         # memory accounting: elastic pages == sum over models
         expect = sum(m.remapped_alpha * pages_per_unit
                      for m in store.models.values())

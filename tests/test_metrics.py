@@ -1,0 +1,109 @@
+"""ServingMetrics tail statistics on hand-built request timelines (the
+paper reports p99 TTFT/TBT — benchmarks read these fields), plus the
+engine's live-context T_c feedback into the controller's α cap."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, scaled_config
+from repro.core import layer_selection as ls
+from repro.models import build_model
+from repro.serving import ServingEngine, TenantConfig
+from repro.serving.request import Request, ServingMetrics, percentile
+
+
+def _req(rid, model, arrival, token_times, prompt_len=4):
+    r = Request(rid=rid, model=model,
+                prompt=np.zeros(prompt_len, np.int32),
+                max_new_tokens=len(token_times), arrival=arrival)
+    r.t_first_token = token_times[0]
+    r.token_times = list(token_times)
+    r.generated = [0] * len(token_times)
+    r.finished = True
+    return r
+
+
+def test_tail_metrics_on_handbuilt_timeline():
+    # one well-behaved request (TBT 0.01) and one whose decode hits three
+    # 1.0s stalls — 3% of samples, so they must surface at p99 (a single
+    # stall in 149 samples would NOT: tails need frequency, not anecdotes)
+    smooth = _req("a", "m", 0.0, [0.5 + 0.01 * i for i in range(50)])
+    stall_times, t = [], 1.0
+    for i in range(49):
+        t += 1.0 if i in (10, 20, 30) else 0.01
+        stall_times.append(t)
+    stalled = _req("b", "m", 0.0, stall_times)
+    met = ServingMetrics.from_requests([smooth, stalled], makespan=10.0)
+    # TTFTs are 0.5 and 1.01
+    assert met.p99_ttft == pytest.approx(percentile([0.5, 1.01], 99))
+    assert met.p50_ttft == pytest.approx((0.5 + 1.01) / 2)
+    tbts = smooth.tbts() + stalled.tbts()
+    assert len(tbts) == 97
+    assert met.p50_tbt == pytest.approx(0.01)
+    assert met.p99_tbt == pytest.approx(percentile(tbts, 99))
+    assert met.p99_tbt > 0.5
+    assert met.total_tokens == 99
+    assert met.throughput_tok_s == pytest.approx(9.9)
+
+
+def test_metrics_model_filter_isolates_tenant_tail():
+    """The interference benchmark reports the CHAT tenant's slice alone:
+    the victim's stall must not leak into the other tenant's tail."""
+    chat = [_req(f"c{i}", "chat", 0.1 * i,
+                 [0.1 * i + 0.2 + 0.01 * j for j in range(20)])
+            for i in range(5)]
+    long_stall = _req("l", "long", 0.0,
+                      [0.5 + 4.5 * j for j in range(6)])
+    allm = ServingMetrics.from_requests(chat + [long_stall], makespan=30.0)
+    only_chat = ServingMetrics.from_requests(
+        chat + [long_stall], makespan=30.0, model="chat")
+    assert allm.p99_tbt > 1.0            # the long tenant's 4.5s gaps
+    assert only_chat.p99_tbt == pytest.approx(0.01)
+    assert only_chat.total_tokens == 100
+
+
+def test_empty_and_nan_edges():
+    met = ServingMetrics.from_requests([], makespan=0.0)
+    assert np.isnan(met.p99_tbt) and np.isnan(met.p99_ttft)
+    assert met.total_tokens == 0
+
+
+# --------------------------------------------------- live-context T_c feedback
+@pytest.fixture(scope="module")
+def engine():
+    cfg = scaled_config(ARCHS["llama3-8b"], num_layers=4)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return ServingEngine(
+        {"A": TenantConfig(cfg, params, max_batch=4, max_context=64)},
+        mode="mirage", base_kv_pages=64, page_size=4)
+
+
+def _t_c_with_ctx(engine, n_tokens):
+    t = engine.tenants["A"]
+    r = Request(rid="x", model="A", prompt=np.zeros(n_tokens, np.int32),
+                max_new_tokens=1)
+    t.slots = [r] + [None] * (t.max_batch - 1)
+    engine.store.mark_active(["A"])
+    out = engine._t_compute()["A"]
+    t.slots = [None] * t.max_batch
+    return out
+
+
+def test_t_compute_tracks_live_mean_context(engine):
+    """Regression: a fixed max_context/2 guess froze T_c; the controller's
+    pipeline-feasibility α cap must track actual decode time as running
+    contexts grow."""
+    small = _t_c_with_ctx(engine, 16)
+    large = _t_c_with_ctx(engine, 32768)
+    assert large > small * 2, (small, large)
+    # with T_T between the two regimes, the α cap flips from "no remap can
+    # hide its transfers" to "remap is feasible" purely from live context
+    n = engine.tenants["A"].model.repeats
+    t_t = large
+    assert ls.max_alpha(n, small, t_t) == 0
+    assert ls.max_alpha(n, large, t_t) >= 1
+
+    # idle tenants keep the prefill-based estimate
+    engine.store.mark_active([])
+    idle = engine._t_compute()["A"]
+    assert idle > 0

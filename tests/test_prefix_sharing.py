@@ -80,9 +80,12 @@ def test_vllm_preemption_under_pressure_with_sharing(paged_tenants):
     decode snapshot, no stale allocation may be left behind for the queued
     victim (it used to trip fork's 'fork into live request' assert on
     re-admission). Tight pool + concurrent sessions force that path."""
+    # watermark pinned at one page so the 12-page pool still admits
+    # concurrent sessions (the preemption path is what's under test)
     eng = ServingEngine(dict(paged_tenants), mode="vllm",
                         scheduler="temporal", base_kv_pages=12, page_size=4,
-                        quantum_steps=4, prefix_sharing=True)
+                        quantum_steps=4, prefix_sharing=True,
+                        watermark_tokens=4)
     # concurrent sessions (think_time=0 -> all turns queue at once) so
     # several requests of one tenant run simultaneously under pressure
     eng.submit(multi_turn_trace([ConversationSpec(

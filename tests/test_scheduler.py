@@ -57,3 +57,26 @@ def test_spatial_runs_all_busy():
     s = make_scheduler("spatial", ["a", "b", "c"])
     assert isinstance(s, SpatialScheduler)
     assert s.schedule({"a": 1, "c": 2}, {"b": 0}, 0.0) == ["a", "c"]
+
+
+def test_prefill_budget_charges_decode_first():
+    """The step token budget protects decode-heavy tenants from a
+    chunking tenant: decode tokens (one per running request) are charged
+    before any prefill chunk may be scheduled."""
+    s = make_scheduler("temporal", ["a", "b"], step_tokens=64)
+    assert s.prefill_budget(decode_tokens=0) == 64
+    assert s.prefill_budget(decode_tokens=40) == 24
+    assert s.prefill_budget(decode_tokens=64) == 0
+    assert s.prefill_budget(decode_tokens=100) == 0     # never negative
+
+
+def test_prefill_budget_unlimited_by_default():
+    for kind in ("temporal", "spatial"):
+        s = make_scheduler(kind, ["a"])
+        assert s.step_tokens == 0
+        assert s.prefill_budget(decode_tokens=10_000) >= 1 << 20
+
+
+def test_spatial_scheduler_accepts_step_tokens():
+    s = make_scheduler("spatial", ["a", "b"], step_tokens=32)
+    assert s.prefill_budget(decode_tokens=30) == 2

@@ -1,0 +1,108 @@
+"""Paged-slot lifecycle: releasing a batch slot must fully disconnect it
+from the pool. Before the fix, _finish/_preempt cleared ``Tenant.slots``
+but left the slot's page_table row and ctx cursor pointing at freed pages —
+every subsequent ``decode_step_paged`` then scattered the dead slot's
+garbage KV (token 0 at an advancing position) into pages that may already
+belong to another request."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, scaled_config
+from repro.models import build_model
+from repro.serving import ServingEngine, TenantConfig
+from repro.serving.request import Request
+
+
+@pytest.fixture(scope="module")
+def tenant():
+    cfg = scaled_config(ARCHS["llama3-8b"], num_layers=2)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return {"A": TenantConfig(cfg, params, max_batch=4, max_context=64,
+                              paged=True)}
+
+
+def _mk(rid, prompt, max_new, arrival, rng):
+    return Request(rid=rid, model="A",
+                   prompt=rng.integers(0, 256, prompt).astype(np.int32),
+                   max_new_tokens=max_new, arrival=arrival)
+
+
+def _engine(tenant):
+    return ServingEngine(dict(tenant), mode="mirage", scheduler="temporal",
+                         base_kv_pages=64, page_size=4, quantum_steps=4)
+
+
+def test_freed_slot_never_corrupts_successor(tenant):
+    """Two requests finish in the same step (both slots go dead with their
+    stale rows); a later arrival is admitted into slot 0 and — via the
+    LIFO free list — into the SECOND victim's freed pages, while the
+    second victim's slot stays empty. Pre-fix, that dead slot's decode
+    writes marched from its stale ctx straight into the successor's
+    freshly prefilled first page; its decoded tokens must instead be
+    bit-identical to a solo run."""
+    rng = np.random.default_rng(7)
+    # prompt 10 + 4 generated = ctx 14 at finish: the dead cursor sits at
+    # offset 2 of the victim's last page, which LIFO hands to B as its
+    # FIRST page (positions 0..3 — read by every later decode step)
+    a = _mk("a", 10, 4, 0.0, rng)
+    c = _mk("c", 10, 4, 0.0, rng)
+    b_prompt = rng.integers(0, 256, 10).astype(np.int32)
+
+    solo = _engine(tenant)
+    solo.submit([Request(rid="b", model="A", prompt=b_prompt.copy(),
+                         max_new_tokens=8, arrival=0.0)])
+    solo.run(max_steps=200)
+    ref = list(solo.finished[0].generated)
+
+    eng = _engine(tenant)
+    eng.submit([a, c,
+                Request(rid="b", model="A", prompt=b_prompt.copy(),
+                        max_new_tokens=8, arrival=30.0)])
+    eng.run(max_steps=400)
+    eng.allocator.check_invariants()
+    out = {r.rid: list(r.generated) for r in eng.finished}
+    assert len(out) == 3
+    assert out["b"] == ref, "successor read the dead slot's garbage KV"
+
+
+def test_cleared_slot_points_at_scratch(tenant):
+    """The lifecycle invariant itself: every EMPTY slot's page-table row
+    references only the scratch page, so the batched decode scatter can
+    never write into allocator-managed pages through a dead slot. (ctx of
+    an empty slot free-runs — decode advances every row's cursor — which
+    is harmless against a scratch row; clear_slot must still reset it so
+    the stale cursor stops marking freed pages.)"""
+    eng = _engine(tenant)
+    rng = np.random.default_rng(3)
+    eng.submit([_mk(f"r{i}", 9, 3, 0.0, rng) for i in range(3)])
+    eng.run(max_steps=300)
+    t = eng.tenants["A"]
+    scratch = t.state["pool_k"].shape[1] - 1
+    pt = np.asarray(t.state["page_table"])
+    for slot, r in enumerate(t.slots):
+        if r is None:
+            assert (pt[slot] == scratch).all(), (slot, pt[slot])
+
+
+def test_clear_slot_resets_row_and_ctx(tenant):
+    """Unit-level: clear_slot on a paged tenant restores the scratch row
+    and zero cursor for exactly the released slot."""
+    from repro.serving.engine import Tenant
+    from repro.serving.hw import TPU_V5E
+    t = Tenant("A", tenant["A"], TPU_V5E)
+    t.init_paged_state(total_pages=16, page_size=4)
+    scratch = 16
+    pt = np.asarray(t.state["page_table"]).copy()
+    pt[1, :3] = [2, 5, 9]
+    t.state = dict(t.state,
+                   page_table=jnp.asarray(pt),
+                   ctx=t.state["ctx"].at[1].set(11))
+    t.slots[1] = object()
+    t.clear_slot(1)
+    assert t.slots[1] is None
+    assert (np.asarray(t.state["page_table"])[1] == scratch).all()
+    assert int(t.state["ctx"][1]) == 0
