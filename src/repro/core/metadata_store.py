@@ -16,11 +16,16 @@ class ModelInfo:
     name: str
     num_layers: int             # remappable units (pattern repeats)
     layer_bytes: int            # device bytes per remappable unit
-    priority: int = 0           # lower = evicted first (scheduler-provided)
+    priority: int = 0           # lower = donates first (scheduler-provided)
     active: bool = False
     last_active_step: int = -1  # for MRU/LRU ordering
     remapped_alpha: int = 0     # units currently donated to KV
     max_remap_fraction: float = 0.5
+    # SLO layer: tier drives victim/preemption ordering (best-effort
+    # donates first); slack is the live signal fed by the runtime via
+    # ``note_slack`` (inf = no deadline at risk / no SLO).
+    slo_tier: str = "best_effort"
+    slack: float = float("inf")
 
     @property
     def max_alpha_cap(self) -> int:
@@ -78,6 +83,13 @@ class MetadataStore:
             m.active = m.name in active
             if m.active:
                 m.last_active_step = self.step_counter
+
+    def note_slack(self, slacks: Dict[str, float]) -> None:
+        """Record per-model live SLO slack (runtime units). Victim
+        selection reads it: high-slack models donate parameter memory
+        first, low-slack (deadline-at-risk) models revert first."""
+        for name, s in slacks.items():
+            self.models[name].slack = s
 
     def inactive_models(self) -> List[ModelInfo]:
         return [m for m in self.models.values() if not m.active]

@@ -6,7 +6,8 @@ Per serving-engine iteration (token granularity):
      for `revert_patience` consecutive steps => revert one unit
      (Dynamic Reversion, §7.6.1).
   2. *which model*     — ``remap_policy.victim_order`` (inactive first,
-     priority else MRU; active models last).
+     then best-effort tier, live SLO slack, priority, MRU/LRU; active
+     models last).
   3. *how many layers* — α capped per model by (a) the per-model
      ``max_remap_fraction`` (cold-start guard) and (b) the pipeline
      feasibility bound ``layer_selection.max_alpha`` given measured T_c and
@@ -39,6 +40,7 @@ class RemapDecision:
 @dataclasses.dataclass
 class ControllerConfig:
     victim_policy: str = "mru"
+    use_priority: bool = True           # honour ModelInfo.priority in ordering
     double_buffer: bool = True
     buffer_mode: str = "dynamic"        # single (A) | double (B) | dynamic (C)
     # False = aggressive (paper Fig 17 "non-capped"): remap active models
@@ -117,7 +119,8 @@ class RemappingController:
 
     def _remap_one(self, t_compute) -> Optional[RemapDecision]:
         caps = self._alpha_caps(t_compute)
-        victim = next_victim(self.store, self.cfg.victim_policy, caps)
+        victim = next_victim(self.store, self.cfg.victim_policy, caps,
+                             self.cfg.use_priority)
         if victim is None:
             return None
         new_alpha = victim.remapped_alpha + 1
@@ -128,7 +131,8 @@ class RemappingController:
         return RemapDecision(victim.name, new_alpha, plan)
 
     def _revert_one(self, t_compute) -> Optional[RemapDecision]:
-        m = next_revert(self.store, self.cfg.victim_policy)
+        m = next_revert(self.store, self.cfg.victim_policy,
+                        self.cfg.use_priority)
         if m is None:
             return None
         new_alpha = m.remapped_alpha - 1

@@ -1,7 +1,14 @@
 from repro.serving.engine import ServingEngine, TenantConfig
 from repro.serving.request import Request, ServingMetrics
+from repro.serving.slo import (
+    BEST_EFFORT, LATENCY, SLOSpec, slo_attainment, tenant_slack,
+)
+from repro.serving.scheduler import (
+    SLOScheduler, SpatialScheduler, TemporalScheduler, make_scheduler,
+)
 from repro.serving.traces import (
-    ConversationSpec, TraceSpec, make_trace, multi_turn_trace, tiny_trace,
+    ConversationSpec, DiurnalSpec, TraceSpec, diurnal_trace, make_trace,
+    multi_turn_trace, tiny_trace,
 )
 from repro.serving.hw import HardwareSpec, TPU_V5E, TPU_V5E_PCIE, GH200, SPECS
 from repro.serving.perf_model import PerfModel

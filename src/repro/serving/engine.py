@@ -43,6 +43,9 @@ from repro.serving.request import (
     DECODE_WATERMARK_TOKENS, Request, ServingMetrics,
 )
 from repro.serving.scheduler import make_scheduler
+from repro.serving.slo import (
+    BEST_EFFORT, SLOSpec, request_slack, tenant_slack, tier_rank,
+)
 
 
 def execute_remap_decision(allocator, store, elastic_pages, d, *,
@@ -90,6 +93,9 @@ class TenantConfig:
     max_batch: int = 8
     max_context: int = 64
     priority: int = 0
+    # per-tenant SLO: targets are in ENGINE STEPS (the functional engine's
+    # clock); the tier drives victim selection and preemption order
+    slo: SLOSpec = dataclasses.field(default_factory=SLOSpec)
     # paged=True: decode reads the elastic paged KV pool through
     # kernels/paged_attention (attention-stack archs only). Pool pages map
     # 1:1 to allocator page ids; a remap tier switch that grows the
@@ -210,6 +216,7 @@ class ServingEngine:
         prefill_chunk_tokens: int = 0,
         step_tokens: int = 0,
         watermark_tokens: int = DECODE_WATERMARK_TOKENS,
+        slack_margin: float = 0.0,
     ):
         """``prefill_chunk_tokens``: > 0 enables token-budget chunked
         prefill for paged tenants — an admitted prompt is computed in
@@ -219,13 +226,23 @@ class ServingEngine:
         token budget; decode tokens are charged first, prefill chunks
         consume the remainder (0 = unlimited). ``watermark_tokens``:
         decode headroom reserved per running request at admission, shared
-        with the simulator via ``DECODE_WATERMARK_TOKENS``."""
+        with the simulator via ``DECODE_WATERMARK_TOKENS``.
+        ``scheduler="slo"`` enables slack-driven scheduling over each
+        tenant's ``TenantConfig.slo`` (targets in engine steps);
+        ``slack_margin`` is the urgency threshold in steps."""
         assert mode in ("mirage", "vllm", "swap")
         self.mode = mode
         self.hw = hw
         self.runtime = runtime
         self.prefill_chunk_tokens = int(prefill_chunk_tokens)
         self.watermark_tokens = int(watermark_tokens)
+        self.slo_specs: Dict[str, SLOSpec] = {
+            n: tc.slo for n, tc in tenants.items()}
+        # slack is only worth computing when some tenant has a real SLO:
+        # with every spec at the all-inf default, every slack is inf and
+        # both consumers (scheduler urgency, victim ordering) ignore it
+        self._slo_enabled = any(
+            s != SLOSpec() for s in self.slo_specs.values())
         self.tenants = {n: Tenant(n, tc, hw) for n, tc in tenants.items()}
         self.allocator = PagedKVAllocator(base_kv_pages, page_size)
         self.store = MetadataStore(MemoryInfo(
@@ -238,7 +255,8 @@ class ServingEngine:
             self.store.register(ModelInfo(
                 name=n, num_layers=t.model.repeats, layer_bytes=unit_bytes,
                 priority=tenants[n].priority,
-                max_remap_fraction=runtime.max_remap_fraction))
+                max_remap_fraction=runtime.max_remap_fraction,
+                slo_tier=tenants[n].slo.tier))
             self.xfer.register(n, t.params["blocks"], unit_bytes)
         self.controller = RemappingController(
             self.store,
@@ -252,9 +270,8 @@ class ServingEngine:
         )
         self.scheduler = make_scheduler(
             scheduler, list(self.tenants), quantum_steps=quantum_steps,
-            step_tokens=step_tokens) \
-            if scheduler == "temporal" else make_scheduler(
-                scheduler, list(self.tenants), step_tokens=step_tokens)
+            step_tokens=step_tokens, specs=self.slo_specs,
+            slack_margin=slack_margin)
         self.step_idx = 0
         self.finished: List[Request] = []
         self.events: List[Tuple[int, str, str]] = []   # (step, kind, detail)
@@ -292,7 +309,12 @@ class ServingEngine:
         while self._incoming and self._incoming[0].arrival <= now:
             r = self._incoming.popleft()
             self.tenants[r.model].queue.append(r)
-        # 2. schedule
+        # 2. schedule — live SLO slack feeds both the scheduler (EDF
+        # urgency) and the MetadataStore (victim/reversion ordering)
+        if self._slo_enabled:
+            slacks = self._slo_slack(now)
+            self.store.note_slack(slacks)
+            self.scheduler.observe_slack(slacks)
         pending = {n: len(t.queue) for n, t in self.tenants.items()}
         running = {n: len(t.running()) for n, t in self.tenants.items()}
         active = self.scheduler.schedule(pending, running, now)
@@ -317,6 +339,36 @@ class ServingEngine:
         self._memory_control(pressure)
 
     # ------------------------------------------------------------- internals
+    def _slo_slack(self, now: float) -> Dict[str, float]:
+        """Per-tenant slack in ENGINE STEPS: one decode == one step, and a
+        chunked prefill takes ceil(remaining prompt / chunk) steps to first
+        token — mid-prefill slots use their own remaining-token estimate,
+        not the queue head's. (The simulator computes the same signal in
+        seconds from its PerfModel — slack ordering is unit-invariant.)"""
+        chunk = self.prefill_chunk_tokens
+        out = {}
+        for n, t in self.tenants.items():
+            spec = self.slo_specs[n]
+
+            def steps_left(remaining_tokens, chunked=t.paged and chunk > 0):
+                if chunked:
+                    return float(-(-max(remaining_tokens, 1) // chunk))
+                return 1.0
+
+            head = t.queue[0] if t.queue else None
+            t_first = steps_left(head.prompt_len) if head is not None else 1.0
+            running = t.running()
+            slack = tenant_slack(
+                spec, now, t.queue,
+                [r for r in running if not r.prefilling], t_first, 1.0)
+            for r in running:
+                if r.prefilling:
+                    slack = min(slack, request_slack(
+                        r, spec, now,
+                        steps_left(r.prompt_len - r.prefill_pos), 1.0))
+            out[n] = slack
+        return out
+
     def _t_compute(self) -> Dict[str, float]:
         """Per-model T_c fed to the controller's pipeline-feasibility cap
         (§5.3). Uses the LIVE mean context of the running batch — a fixed
@@ -459,9 +511,14 @@ class ServingEngine:
 
     def _reclaim(self, need_pages: int) -> int:
         """Evict unreferenced cached prefix blocks (leaf-first LRU) to free
-        pages — tried before remapping (mirage) or preemption (vllm)."""
+        pages — tried before remapping (mirage) or preemption (vllm).
+        Best-effort tenants' caches are drained before latency-critical
+        ones: a cold cache miss is the cheapest place to take pressure,
+        and the best-effort tier is who should take it."""
         freed = 0
-        for name, idx in self.prefix.items():
+        by_tier = sorted(self.prefix.items(), key=lambda kv: (
+            tier_rank(self.slo_specs[kv[0]].tier), kv[0]))
+        for name, idx in by_tier:
             if freed >= need_pages:
                 break
             pages = idx.evict(need_pages - freed, evictable=self._cache_only)
@@ -703,12 +760,16 @@ class ServingEngine:
 
     # ------------------------------------------------------------ preemption
     def _preempt_one(self, exclude: str = "") -> bool:
-        """vLLM recompute baseline: evict the youngest running request."""
+        """vLLM recompute baseline: evict the youngest running request —
+        taken from a best-effort tenant whenever one is running, so the
+        recompute stall lands on the tier without latency targets."""
         cands = [(r, t) for t in self.tenants.values() for r in t.running()
                  if r.rid != exclude]
         if not cands:
             return False
-        r, t = max(cands, key=lambda rt: rt[0].arrival)
+        r, t = max(cands, key=lambda rt: (
+            self.slo_specs[rt[0].model].tier == BEST_EFFORT,
+            rt[0].arrival))
         self._preempt(r)
         return True
 
@@ -757,6 +818,11 @@ class ServingEngine:
     def metrics(self) -> ServingMetrics:
         return ServingMetrics.from_requests(
             self.finished, makespan=float(self.step_idx))
+
+    def tier_metrics(self) -> Dict[str, ServingMetrics]:
+        """Tail metrics per SLO tier (engine-step clock)."""
+        return ServingMetrics.per_tier(
+            self.finished, self.slo_specs, makespan=float(self.step_idx))
 
     def prefix_stats(self) -> Dict[str, Any]:
         """Per-tenant prefix-cache counters (empty when sharing is off)."""

@@ -88,6 +88,12 @@ class PerfModel:
         t_stream = streamed_bytes / self.hw.host_link_bw
         return max(t_compute, t_hbm, t_stream)
 
+    def next_token_time(self, batch: int, avg_ctx: float) -> float:
+        """Predicted time to the next emitted token for the running batch —
+        the earliest-deadline-first signal the SLO scheduler's slack
+        computation consumes (``serving/slo.tenant_slack``)."""
+        return self.decode_step_time(batch, avg_ctx)
+
     # ------------------------------------------------------------ prefill/TTFT
     def prefill_time(self, prompt_tokens: int, batch: int = 1) -> float:
         flops = 2.0 * (self.active_param_bytes / self.dtype_bytes) \

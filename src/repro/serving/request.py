@@ -2,9 +2,11 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
+
+from repro.serving.slo import SLOSpec, slo_attainment as _slo_attainment
 
 # Admission watermark: tokens of decode headroom reserved per running
 # request so decode can always progress without admission thrash. The ONE
@@ -75,6 +77,10 @@ class ServingMetrics:
     # prefix sharing (0 when disabled)
     saved_prefill_tokens: int = 0      # prompt tokens served from cached KV
     prefix_hit_rate: float = 0.0       # saved / total prompt tokens
+    # per-request (ttft-or-None, max tbt) samples retained so SLO
+    # attainment can be evaluated against any spec after the fact
+    _per_request: List = dataclasses.field(
+        default_factory=list, repr=False, compare=False)
 
     @staticmethod
     def from_requests(reqs: List[Request], makespan: float,
@@ -88,6 +94,7 @@ class ServingMetrics:
         tokens = sum(len(r.generated) for r in reqs)
         saved = sum(r.prefix_matched_tokens for r in reqs)
         prompt_tokens = sum(r.prompt_len for r in reqs)
+        per_request = [(r.ttft(), max(r.tbts(), default=0.0)) for r in reqs]
         return ServingMetrics(
             p99_ttft=percentile(ttfts, 99),
             p99_tbt=percentile(tbts, 99),
@@ -100,7 +107,30 @@ class ServingMetrics:
             preemptions=sum(r.preemptions for r in reqs),
             saved_prefill_tokens=saved,
             prefix_hit_rate=saved / prompt_tokens if prompt_tokens else 0.0,
+            _per_request=per_request,
         )
+
+    def slo_attainment(self, spec: SLOSpec) -> float:
+        """Fraction of this slice's requests meeting ``spec`` (request
+        level: TTFT within target AND every TBT within target). NaN when
+        the slice is empty; a request that never got a first token counts
+        as a miss."""
+        ttfts = [t for t, _ in self._per_request]
+        max_tbts = [m for _, m in self._per_request]
+        return _slo_attainment(ttfts, max_tbts, spec)
+
+    @staticmethod
+    def per_tier(reqs: List[Request], specs: Dict[str, SLOSpec],
+                 makespan: float) -> Dict[str, "ServingMetrics"]:
+        """Tail metrics per SLO tier. Every tier named by ``specs`` gets an
+        entry, including tiers with no finished requests (NaN tails, zero
+        tokens) — benchmark tables stay rectangular when a tier idles."""
+        out: Dict[str, ServingMetrics] = {}
+        for tier in dict.fromkeys(s.tier for s in specs.values()):
+            models = {m for m, s in specs.items() if s.tier == tier}
+            out[tier] = ServingMetrics.from_requests(
+                [r for r in reqs if r.model in models], makespan)
+        return out
 
     def row(self) -> str:
         return (f"p99_ttft={self.p99_ttft:.4f} p99_tbt={self.p99_tbt:.5f} "

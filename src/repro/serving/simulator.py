@@ -37,6 +37,9 @@ from repro.serving.request import (
     DECODE_WATERMARK_TOKENS, Request, ServingMetrics,
 )
 from repro.serving.scheduler import make_scheduler
+from repro.serving.slo import (
+    BEST_EFFORT, SLOSpec, request_slack, tenant_slack,
+)
 
 
 @dataclasses.dataclass
@@ -44,6 +47,8 @@ class SimTenantConfig:
     cfg: ModelConfig
     max_batch: int = 64
     mem_fraction: float = 0.35     # paper Table 1 GPU reservation
+    # per-tenant SLO: targets in SECONDS (the simulator's clock)
+    slo: SLOSpec = dataclasses.field(default_factory=SLOSpec)
 
 
 class SimTenant:
@@ -119,6 +124,7 @@ class Simulator:
         prefill_chunk_tokens: int = 0,    # 0 = monolithic prefill
         step_tokens: int = 0,             # scheduler token budget (0 = inf)
         watermark_tokens: int = DECODE_WATERMARK_TOKENS,
+        slack_margin: float = 0.0,        # SLO urgency threshold (seconds)
     ):
         assert mode in ("mirage", "vllm", "swap")
         self.mode = mode
@@ -126,6 +132,12 @@ class Simulator:
         self.uniform_selection = uniform_selection
         self.prefill_chunk_tokens = int(prefill_chunk_tokens)
         self.watermark_tokens = int(watermark_tokens)
+        self.slo_specs: Dict[str, SLOSpec] = {
+            n: tc.slo for n, tc in tenants.items()}
+        # mirror of the engine: with every spec at the all-inf default,
+        # every slack is inf and both consumers ignore it — skip the work
+        self._slo_enabled = any(
+            s != SLOSpec() for s in self.slo_specs.values())
         self.tenants = {
             n: SimTenant(n, tc, hw,
                          prefix_page=prefix_page if prefix_sharing else 0)
@@ -139,7 +151,8 @@ class Simulator:
             self.store.register(ModelInfo(
                 name=n, num_layers=t.perf.repeats,
                 layer_bytes=t.perf.unit_bytes,
-                max_remap_fraction=max_remap_fraction))
+                max_remap_fraction=max_remap_fraction,
+                slo_tier=self.slo_specs[n].tier))
         self.controller = RemappingController(
             self.store,
             ControllerConfig(
@@ -151,9 +164,8 @@ class Simulator:
         )
         self.scheduler = make_scheduler(
             scheduler, list(self.tenants), quantum_steps=quantum_steps,
-            step_tokens=step_tokens) \
-            if scheduler == "temporal" else make_scheduler(
-                scheduler, list(self.tenants), step_tokens=step_tokens)
+            step_tokens=step_tokens, specs=self.slo_specs,
+            slack_margin=slack_margin)
         self.now = 0.0
         self._prefill_budget = 0       # per-iteration, shared by tenants
         self.finished: List[Request] = []
@@ -189,6 +201,10 @@ class Simulator:
             while incoming and incoming[0].arrival <= self.now:
                 r = incoming.popleft()
                 self.tenants[r.model].queue.append(r)
+            if self._slo_enabled:
+                slacks = self._slo_slack()
+                self.store.note_slack(slacks)
+                self.scheduler.observe_slack(slacks)
             pending = {n: len(t.queue) for n, t in self.tenants.items()}
             running = {n: len(t.running) + len(t.prefilling)
                        for n, t in self.tenants.items()}
@@ -221,6 +237,30 @@ class Simulator:
         return ServingMetrics.from_requests(self.finished, makespan)
 
     # ----------------------------------------------------------- iteration
+    def _slo_slack(self) -> Dict[str, float]:
+        """Per-tenant slack in SECONDS: earliest deadline minus
+        PerfModel-predicted service time (``next_token_time`` for running
+        requests, ``prefill_time`` of the queue head for TTFT; a
+        mid-prefill request's TTFT deadline uses the prefill time of its
+        *remaining* tokens, not the queue head's)."""
+        out = {}
+        for n, t in self.tenants.items():
+            spec = self.slo_specs[n]
+            batch = max(len(t.running), 1)
+            avg_ctx = (sum(r.total_len for r in t.running) / len(t.running)) \
+                if t.running else 512.0
+            t_next = t.perf.next_token_time(batch, avg_ctx)
+            head = t.queue[0] if t.queue else None
+            t_first = t.perf.prefill_time(head.prompt_len) if head else 0.0
+            slack = tenant_slack(spec, self.now, t.queue, t.running,
+                                 t_first, t_next)
+            for r in t.prefilling:
+                slack = min(slack, request_slack(
+                    r, spec, self.now,
+                    t.perf.prefill_time(max(r._prefill_left, 1)), t_next))
+            out[n] = slack
+        return out
+
     def _capacity(self, t: SimTenant) -> int:
         """Device KV capacity currently available to tenant t."""
         base = t.kv_capacity_base
@@ -437,10 +477,14 @@ class Simulator:
         return stall
 
     def _preempt_youngest(self, t: SimTenant) -> float:
+        """Youngest running request, preferring best-effort tenants: the
+        recompute stall lands on the tier without latency targets (mirrors
+        the engine's ``_preempt_one``)."""
         cands = [r for tt in self.tenants.values() for r in tt.running]
         if not cands:
             return 0.0
-        victim = max(cands, key=lambda r: r.arrival)
+        victim = max(cands, key=lambda r: (
+            self.slo_specs[r.model].tier == BEST_EFFORT, r.arrival))
         vt = self.tenants[victim.model]
         vt.running.remove(victim)
         victim.preemptions += 1
@@ -463,6 +507,11 @@ class Simulator:
         # the paper: decode pauses for all active requests during eviction +
         # recompute; charge the recompute time as the stall
         return vt.perf.prefill_time(victim.total_len)
+
+    def tier_metrics(self) -> Dict[str, ServingMetrics]:
+        """Tail metrics per SLO tier (seconds clock)."""
+        return ServingMetrics.per_tier(self.finished, self.slo_specs,
+                                       makespan=self.now)
 
     # controller's MemoryInfo free_fraction is driven by byte accounting
     def _sync_memory(self):

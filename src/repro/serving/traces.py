@@ -30,6 +30,27 @@ def _lognormal_lengths(rng, mean: float, sigma: float, n: int,
     return np.clip(v.astype(np.int64), lo, hi)
 
 
+def _dataset_requests(rng, model: str, dataset: str, arrivals,
+                      vocab: int, rid_prefix: str) -> List["Request"]:
+    """Length-sample and build one tenant's requests for the given
+    arrival times (shared by ``make_trace`` and ``diurnal_trace`` so the
+    two workloads can never drift apart in how they sample lengths or
+    construct requests). Draw order — prompt lengths, output lengths,
+    then per-request prompt tokens — is part of the seed-stability
+    contract."""
+    mean_in, mean_out, sigma = DATASETS[dataset]
+    n = len(arrivals)
+    p_lens = _lognormal_lengths(rng, mean_in, sigma, n)
+    o_lens = _lognormal_lengths(rng, mean_out, sigma, n)
+    return [Request(
+        rid=f"{rid_prefix}-{i}",
+        model=model,
+        prompt=rng.integers(0, vocab, int(p_lens[i])).astype(np.int32),
+        max_new_tokens=int(o_lens[i]),
+        arrival=float(arrivals[i]),
+    ) for i in range(n)]
+
+
 def bursty_arrivals(rng, rate: float, duration: float,
                     burstiness: float = 2.0) -> np.ndarray:
     """Gamma-modulated Poisson arrivals over [0, duration) at ``rate`` req/s.
@@ -67,19 +88,62 @@ def make_trace(specs: Sequence[TraceSpec], seed: int = 0) -> List[Request]:
     reqs: List[Request] = []
     for si, spec in enumerate(specs):
         rng = np.random.default_rng([seed, si])
-        mean_in, mean_out, sigma = DATASETS[spec.dataset]
         arr = bursty_arrivals(rng, spec.rate, spec.duration, spec.burstiness)
-        n = len(arr)
-        p_lens = _lognormal_lengths(rng, mean_in, sigma, n)
-        o_lens = _lognormal_lengths(rng, mean_out, sigma, n)
-        for i in range(n):
-            reqs.append(Request(
-                rid=f"{spec.model}-{si}-{i}",
-                model=spec.model,
-                prompt=rng.integers(0, spec.vocab, int(p_lens[i])).astype(np.int32),
-                max_new_tokens=int(o_lens[i]),
-                arrival=float(arr[i]),
-            ))
+        reqs.extend(_dataset_requests(rng, spec.model, spec.dataset, arr,
+                                      spec.vocab, f"{spec.model}-{si}"))
+    reqs.sort(key=lambda r: r.arrival)
+    return reqs
+
+
+# ------------------------------------------------- diurnal on/off activity
+@dataclasses.dataclass
+class DiurnalSpec:
+    """One tenant's diurnal activity pattern: the tenant cycles between an
+    ON phase (Poisson bursts at ``peak_rate``) and an OFF phase (a trickle
+    at ``peak_rate * off_scale``, 0 = fully dark). Anti-phase tenants
+    (``phase`` offsets of half a period) produce the paper's multi-tenant
+    sweet spot: while one tenant sleeps, its parameters are pure remap
+    fuel for the tenant that is awake."""
+    model: str
+    dataset: str
+    peak_rate: float               # requests/s while ON
+    duration: float = 60.0
+    period: float = 30.0           # ON+OFF cycle length (s)
+    duty: float = 0.5              # fraction of the period that is ON
+    phase: float = 0.0             # cycle offset (s); period/2 = anti-phase
+    off_scale: float = 0.0         # OFF-phase rate as a fraction of peak
+    burstiness: float = 2.0        # Gamma burst shape within the ON phase
+    vocab: int = 32000
+
+
+def diurnal_trace(specs: Sequence[DiurnalSpec], seed: int = 0) -> List[Request]:
+    """Multi-tenant diurnal/bursty trace, merged and sorted by arrival.
+
+    Same seed-stability contract as ``make_trace``: every spec draws from
+    its own RNG stream keyed by (seed, stream, spec index), so editing one
+    tenant's spec never reshuffles another tenant's workload."""
+    reqs: List[Request] = []
+    for si, spec in enumerate(specs):
+        rng = np.random.default_rng([seed, 3 << 16, si])
+        on_len = spec.period * spec.duty
+        arr: List[float] = []
+        # walk the phase windows; each ON window gets its own bursty
+        # arrival process, each OFF window a thin Poisson trickle
+        t = -spec.phase % spec.period - spec.period
+        while t < spec.duration:
+            for win, rate in ((on_len, spec.peak_rate),
+                              (spec.period - on_len,
+                               spec.peak_rate * spec.off_scale)):
+                if win <= 0 or rate <= 0:
+                    t += win
+                    continue
+                win_arr = bursty_arrivals(rng, rate, win, spec.burstiness)
+                arr.extend(t + a for a in win_arr
+                           if 0.0 <= t + a < spec.duration)
+                t += win
+        arr.sort()
+        reqs.extend(_dataset_requests(rng, spec.model, spec.dataset, arr,
+                                      spec.vocab, f"{spec.model}-d{si}"))
     reqs.sort(key=lambda r: r.arrival)
     return reqs
 

@@ -68,6 +68,58 @@ def test_empty_and_nan_edges():
     assert met.total_tokens == 0
 
 
+# --------------------------------------------------------- per-tier metrics
+def _tier_specs():
+    from repro.serving.slo import LATENCY, SLOSpec
+    return {"chat": SLOSpec(ttft_target=0.6, tbt_target=0.05, tier=LATENCY),
+            "chat2": SLOSpec(ttft_target=0.6, tbt_target=0.05, tier=LATENCY),
+            "batch": SLOSpec()}
+
+
+def test_per_tier_percentile_math_on_handbuilt_timelines():
+    """Per-tier slices must aggregate all of the tier's tenants and keep
+    the other tier's stalls out of its tail."""
+    chat = [_req(f"c{i}", "chat", 0.0, [0.5 + 0.01 * j for j in range(11)])
+            for i in range(3)]
+    chat2 = [_req("c2", "chat2", 0.0, [0.4 + 0.02 * j for j in range(11)])]
+    batch = [_req("b", "batch", 0.0, [2.0 + 1.0 * j for j in range(5)])]
+    tiers = ServingMetrics.per_tier(chat + chat2 + batch, _tier_specs(),
+                                    makespan=10.0)
+    assert set(tiers) == {"latency", "best_effort"}
+    lat, be = tiers["latency"], tiers["best_effort"]
+    # latency tier pools chat (30 tbts of 0.01) + chat2 (10 of 0.02)
+    assert lat.total_tokens == 44
+    assert lat.p50_tbt == pytest.approx(0.01)
+    assert lat.p99_tbt == pytest.approx(percentile([0.01] * 30 + [0.02] * 10,
+                                                   99))
+    assert lat.p99_ttft == pytest.approx(percentile([0.5, 0.5, 0.5, 0.4], 99))
+    # batch's 1.0s gaps stay in its own tier
+    assert be.p50_tbt == pytest.approx(1.0)
+    assert be.total_tokens == 5
+    assert lat.p99_tbt < 0.05 < be.p50_tbt
+
+
+def test_per_tier_attainment_uses_each_tiers_spec():
+    specs = _tier_specs()
+    ok = _req("ok", "chat", 0.0, [0.5 + 0.01 * j for j in range(5)])
+    late = _req("late", "chat", 0.0, [0.9 + 0.01 * j for j in range(5)])
+    tiers = ServingMetrics.per_tier([ok, late], specs, makespan=2.0)
+    assert tiers["latency"].slo_attainment(specs["chat"]) \
+        == pytest.approx(0.5)
+
+
+def test_per_tier_empty_tier_yields_nan_row():
+    """A tier with no finished requests still gets an entry (NaN tails,
+    zero tokens) so benchmark tables stay rectangular."""
+    chat_only = [_req("c", "chat", 0.0, [0.5, 0.51])]
+    tiers = ServingMetrics.per_tier(chat_only, _tier_specs(), makespan=1.0)
+    assert set(tiers) == {"latency", "best_effort"}
+    empty = tiers["best_effort"]
+    assert empty.total_tokens == 0
+    assert np.isnan(empty.p99_tbt) and np.isnan(empty.p99_ttft)
+    assert np.isnan(empty.slo_attainment(_tier_specs()["batch"]))
+
+
 # --------------------------------------------------- live-context T_c feedback
 @pytest.fixture(scope="module")
 def engine():

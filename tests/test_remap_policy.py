@@ -1,0 +1,102 @@
+"""Victim-selection ordering regressions: priority-vs-MRU interaction,
+``next_revert`` honouring ``use_priority``, SLO tier/slack ordering, and
+deterministic tie-breaks."""
+import math
+
+from repro.core.metadata_store import MemoryInfo, MetadataStore, ModelInfo
+from repro.core.remap_policy import next_revert, next_victim, victim_order
+
+
+def _store(names, **overrides):
+    store = MetadataStore(MemoryInfo(
+        hbm_bytes=1 << 30, page_bytes=1024, base_kv_pages=64))
+    for n in names:
+        store.register(ModelInfo(name=n, num_layers=8, layer_bytes=4096,
+                                 **overrides.get(n, {})))
+    return store
+
+
+def test_priority_orders_within_recency_ties():
+    """Regression: priority used to *replace* recency entirely with no
+    tie-break; now equal-priority models still order by MRU/LRU."""
+    store = _store("ABCD", A={"priority": 1}, B={"priority": 1},
+                   C={"priority": 0}, D={"priority": 0})
+    store.mark_active(["A"]); store.mark_active(["B"])
+    store.mark_active(["C"]); store.mark_active(["D"])
+    store.mark_active([])
+    order = [m.name for m in victim_order(store, "mru")]
+    # priority 0 first; within each priority, MRU (most recent first)
+    assert order == ["D", "C", "B", "A"]
+    order = [m.name for m in victim_order(store, "lru")]
+    assert order == ["C", "D", "A", "B"]
+
+
+def test_use_priority_false_falls_back_to_pure_recency():
+    store = _store("AB", A={"priority": 5}, B={"priority": 0})
+    store.mark_active(["B"]); store.mark_active(["A"])
+    store.mark_active([])
+    assert [m.name for m in victim_order(store, "mru", use_priority=False)] \
+        == ["A", "B"]           # MRU ignores the priorities entirely
+    assert [m.name for m in victim_order(store, "mru", use_priority=True)] \
+        == ["B", "A"]
+
+
+def test_next_revert_honours_use_priority():
+    """Regression: ``next_revert`` silently dropped ``use_priority`` —
+    the reversion order could contradict the donation order it claims to
+    reverse."""
+    store = _store("AB", A={"priority": 5}, B={"priority": 0})
+    store.mark_active(["B"]); store.mark_active(["A"])
+    store.mark_active([])
+    for m in store.models.values():
+        m.remapped_alpha = 1
+    # priority on: B donated first, so A reverts first... i.e. the
+    # reversed order ends at the first donor
+    assert next_revert(store, "mru", use_priority=True).name == "A"
+    # priority off: MRU donated A first, so B reverts first
+    assert next_revert(store, "mru", use_priority=False).name == "B"
+
+
+def test_ties_are_fully_deterministic_by_name():
+    store = _store("CBA")        # identical everything, insertion order CBA
+    order = [m.name for m in victim_order(store, "mru")]
+    assert order == ["A", "B", "C"]
+    assert [m.name for m in victim_order(store, "lru")] == ["A", "B", "C"]
+
+
+def test_best_effort_tier_donates_before_latency_tier():
+    store = _store("AB", A={"slo_tier": "latency"},
+                   B={"slo_tier": "best_effort"})
+    # A is *more recently used* (MRU would pick it first) — tier wins
+    store.mark_active(["B"]); store.mark_active(["A"])
+    store.mark_active([])
+    assert [m.name for m in victim_order(store, "mru")] == ["B", "A"]
+    for m in store.models.values():
+        m.remapped_alpha = 1
+    # reversion restores the latency-critical model first
+    assert next_revert(store, "mru").name == "A"
+
+
+def test_high_slack_donates_first_low_slack_reverts_first():
+    store = _store("ABC")
+    store.note_slack({"A": 0.5, "B": math.inf, "C": -2.0})
+    order = [m.name for m in victim_order(store, "mru")]
+    assert order == ["B", "A", "C"]          # most headroom donates first
+    for m in store.models.values():
+        m.remapped_alpha = 1
+    assert next_revert(store, "mru").name == "C"   # deadline at risk
+
+
+def test_nan_slack_is_treated_as_no_deadline():
+    store = _store("AB")
+    store.note_slack({"A": float("nan"), "B": 1.0})
+    assert [m.name for m in victim_order(store, "mru")] == ["A", "B"]
+
+
+def test_inactive_still_precede_active_regardless_of_tier_and_slack():
+    store = _store("AB", A={"slo_tier": "best_effort"},
+                   B={"slo_tier": "latency"})
+    store.note_slack({"A": math.inf, "B": -5.0})
+    store.mark_active(["A"])                 # A active, B inactive
+    assert [m.name for m in victim_order(store, "mru")] == ["B", "A"]
+    assert next_victim(store, "mru").name == "B"

@@ -80,3 +80,22 @@ def test_prefill_budget_unlimited_by_default():
 def test_spatial_scheduler_accepts_step_tokens():
     s = make_scheduler("spatial", ["a", "b"], step_tokens=32)
     assert s.prefill_budget(decode_tokens=30) == 2
+
+
+def test_prefill_budget_edge_cases():
+    """Zero-budget and decode-exceeds-budget edges, across scheduler
+    kinds: the budget must clamp at 0 (never negative) exactly when
+    decode uses the whole step, and stay unlimited for step_tokens <= 0
+    (including explicit negatives)."""
+    for kind in ("temporal", "spatial", "slo"):
+        s = make_scheduler(kind, ["a", "b"], step_tokens=8)
+        assert s.prefill_budget(decode_tokens=8) == 0      # exactly consumed
+        assert s.prefill_budget(decode_tokens=9) == 0      # decode > budget
+        assert s.prefill_budget(decode_tokens=7) == 1
+        s_neg = make_scheduler(kind, ["a"], step_tokens=-5)
+        assert s_neg.prefill_budget(decode_tokens=1 << 20) >= 1 << 20
+
+
+def test_prefill_budget_zero_decode_gets_full_budget():
+    s = make_scheduler("slo", ["a"], step_tokens=128)
+    assert s.prefill_budget(decode_tokens=0) == 128

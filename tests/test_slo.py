@@ -1,0 +1,210 @@
+"""SLO layer: spec/slack math, slack-driven scheduling, attainment, and the
+engine/simulator agreement contract on SLO attainment."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.serving.request import Request, ServingMetrics
+from repro.serving.scheduler import SLOScheduler, TemporalScheduler, \
+    make_scheduler
+from repro.serving.slo import (
+    BEST_EFFORT, LATENCY, SLOSpec, request_slack, slo_attainment,
+    tenant_slack, uniform_specs,
+)
+
+
+def _req(rid="r", arrival=0.0, model="m"):
+    return Request(rid=rid, model=model, prompt=np.zeros(4, np.int32),
+                   max_new_tokens=8, arrival=arrival)
+
+
+# ------------------------------------------------------------------- SLOSpec
+def test_spec_defaults_are_best_effort_and_hashable():
+    s = SLOSpec()
+    assert s.tier == BEST_EFFORT and not s.latency_critical
+    assert math.isinf(s.ttft_target) and math.isinf(s.tbt_target)
+    assert len({SLOSpec(), SLOSpec()}) == 1          # frozen + hashable
+
+def test_spec_rejects_unknown_tier():
+    with pytest.raises(ValueError):
+        SLOSpec(tier="platinum")
+
+
+def test_uniform_specs():
+    a, b = SLOSpec(), SLOSpec(ttft_target=1.0, tier=LATENCY)
+    assert uniform_specs({"x": a, "y": SLOSpec()})
+    assert not uniform_specs({"x": a, "y": b})
+    assert uniform_specs({})
+
+
+# ---------------------------------------------------------------- slack math
+def test_request_slack_ttft_before_first_token():
+    spec = SLOSpec(ttft_target=2.0, tbt_target=0.5, tier=LATENCY)
+    r = _req(arrival=10.0)
+    # waiting since t=10, deadline 12, predicted prefill 0.5 -> slack at t=11
+    assert request_slack(r, spec, 11.0, 0.5, 0.1) == pytest.approx(0.5)
+
+def test_request_slack_tbt_after_first_token():
+    spec = SLOSpec(ttft_target=2.0, tbt_target=0.5, tier=LATENCY)
+    r = _req(arrival=0.0)
+    r.t_first_token = 5.0
+    r.token_times = [5.0, 5.4]
+    # deadline 5.9, predicted next token 0.1 -> slack at t=5.5 is 0.3
+    assert request_slack(r, spec, 5.5, 9.9, 0.1) == pytest.approx(0.3)
+
+def test_tenant_slack_takes_minimum_and_idles_at_inf():
+    spec = SLOSpec(ttft_target=1.0, tbt_target=0.2, tier=LATENCY)
+    assert tenant_slack(spec, 0.0, [], [], 0.0, 0.0) == math.inf
+    queued = [_req(arrival=0.0)]             # ttft slack: 1.0 - 0.5 = 0.5
+    running = [_req(arrival=0.0)]
+    running[0].t_first_token = 0.1
+    running[0].token_times = [0.1]           # tbt slack: 0.1+0.2-0.25-0.05
+    s = tenant_slack(spec, 0.25, queued, running, t_first=0.5, t_next=0.05)
+    assert s == pytest.approx(0.0)           # running deadline is tighter
+
+def test_best_effort_slack_is_always_inf():
+    r = _req(); r.t_first_token = 1.0; r.token_times = [1.0]
+    assert tenant_slack(SLOSpec(), 5.0, [r], [r], 1.0, 1.0) == math.inf
+
+
+# ---------------------------------------------------------------- attainment
+def test_slo_attainment_request_level():
+    spec = SLOSpec(ttft_target=1.0, tbt_target=0.1, tier=LATENCY)
+    ttfts = [0.5, 2.0, 0.9, None]            # None: never got a first token
+    tbts = [0.05, 0.05, 0.5, 0.0]
+    # only the first request meets both targets
+    assert slo_attainment(ttfts, tbts, spec) == pytest.approx(0.25)
+    assert math.isnan(slo_attainment([], [], spec))
+
+def test_metrics_slo_attainment_from_requests():
+    spec = SLOSpec(ttft_target=1.0, tbt_target=0.1, tier=LATENCY)
+    good, bad = _req("g"), _req("b")
+    good.t_first_token, good.token_times = 0.5, [0.5, 0.55, 0.6]
+    bad.t_first_token, bad.token_times = 0.5, [0.5, 0.9]   # tbt 0.4 miss
+    met = ServingMetrics.from_requests([good, bad], makespan=1.0)
+    assert met.slo_attainment(spec) == pytest.approx(0.5)
+    assert met.slo_attainment(SLOSpec()) == pytest.approx(1.0)
+
+
+# -------------------------------------------------------------- SLOScheduler
+def _spec_mix():
+    return {"lat": SLOSpec(ttft_target=10.0, tbt_target=1.0, tier=LATENCY),
+            "be": SLOSpec()}
+
+
+def test_slo_scheduler_degrades_to_round_robin_with_uniform_specs():
+    """Acceptance: with one shared SLOSpec the schedule is bit-identical
+    to TemporalScheduler round-robin, slack values notwithstanding."""
+    specs = {m: SLOSpec(ttft_target=1.0, tbt_target=0.1, tier=LATENCY)
+             for m in ("a", "b", "c")}
+    s = SLOScheduler(["a", "b", "c"], specs=specs, quantum_steps=3)
+    rr = TemporalScheduler(["a", "b", "c"], quantum_steps=3)
+    pend = {"a": 1, "b": 1, "c": 1}
+    for i in range(20):
+        s.observe_slack({"a": -5.0, "b": 0.0, "c": 99.0})  # ignored
+        assert s.schedule(pend, {}, float(i)) == rr.schedule(pend, {}, float(i))
+
+
+def test_slo_scheduler_urgent_tenant_preempts_rotation():
+    s = SLOScheduler(["be", "lat"], specs=_spec_mix(), quantum_steps=4)
+    pend = {"be": 1, "lat": 1}
+    # nobody urgent: round-robin serves the first declared model
+    s.observe_slack({"be": math.inf, "lat": 5.0})
+    assert s.schedule(pend, {}, 0.0) == ["be"]
+    # lat's deadline at risk: it grabs the accelerator out of turn
+    s.observe_slack({"be": math.inf, "lat": -0.1})
+    assert s.schedule(pend, {}, 1.0) == ["lat"]
+    # pressure gone: rotation resumes
+    s.observe_slack({"be": math.inf, "lat": 5.0})
+    assert s.schedule(pend, {}, 2.0) == ["be"]
+
+
+def test_slo_scheduler_most_urgent_wins_and_ties_are_deterministic():
+    specs = {"x": SLOSpec(ttft_target=9.0, tbt_target=9.0, tier=LATENCY),
+             "y": SLOSpec(ttft_target=8.0, tbt_target=8.0, tier=LATENCY),
+             "z": SLOSpec()}
+    s = SLOScheduler(["x", "y", "z"], specs=specs)
+    pend = {"x": 1, "y": 1, "z": 1}
+    s.observe_slack({"x": -1.0, "y": -3.0, "z": math.inf})
+    assert s.schedule(pend, {}, 0.0) == ["y"]     # min slack among urgent
+    # exact three-way tie: latency tier beats best-effort, then
+    # declaration order breaks the x/y tie
+    s.observe_slack({"x": -1.0, "y": -1.0, "z": -1.0})
+    assert s.schedule(pend, {}, 1.0) == ["x"]
+
+
+def test_slo_scheduler_never_schedules_idle_tenants():
+    s = SLOScheduler(["be", "lat"], specs=_spec_mix())
+    s.observe_slack({"lat": -1.0, "be": -1.0})
+    assert s.schedule({"be": 1}, {}, 0.0) == ["be"]
+    assert s.schedule({}, {}, 1.0) == []
+
+
+def test_make_scheduler_slo_and_kwarg_filtering():
+    s = make_scheduler("slo", ["a", "b"], specs=_spec_mix() | {"a": SLOSpec()},
+                       quantum_steps=2, step_tokens=64, slack_margin=0.5)
+    assert isinstance(s, SLOScheduler)
+    assert s.prefill_budget(60) == 4
+    # temporal silently drops the SLO-only kwargs
+    t = make_scheduler("temporal", ["a"], specs={}, slack_margin=1.0,
+                       quantum_steps=2)
+    assert isinstance(t, TemporalScheduler)
+
+
+# ------------------------------------- engine vs simulator attainment accord
+@pytest.fixture(scope="module")
+def engine_and_sim_runs():
+    import jax
+    from benchmarks.common import frac
+    from repro.configs import ARCHS, scaled_config
+    from repro.models import build_model
+    from repro.serving import ServingEngine, TenantConfig
+    from repro.serving.hw import GH200
+    from repro.serving.simulator import SimTenantConfig, Simulator
+    from repro.serving.traces import tiny_trace
+
+    lat = SLOSpec(ttft_target=1e9, tbt_target=1e9, tier=LATENCY)
+    cfg = scaled_config(ARCHS["llama3-8b"], num_layers=4)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    eng = ServingEngine(
+        {"A": TenantConfig(cfg, params, max_batch=2, max_context=64, slo=lat),
+         "B": TenantConfig(cfg, params, max_batch=2, max_context=64)},
+        mode="mirage", scheduler="slo", base_kv_pages=64, page_size=4)
+    eng.submit(tiny_trace(["A", "B"], n_per_model=2))
+    eng.run(max_steps=300)
+
+    sim = Simulator(
+        {"A": SimTenantConfig(ARCHS["llama3-8b"], 8,
+                              frac("llama3-8b", 1.0), slo=lat),
+         "B": SimTenantConfig(ARCHS["granite-3-8b"], 8,
+                              frac("granite-3-8b", 1.0))},
+        mode="mirage", scheduler="slo", hw=GH200)
+    sim.run(tiny_trace(["A", "B"], n_per_model=2))
+    return eng, sim
+
+
+def test_engine_and_sim_agree_on_slo_attainment(engine_and_sim_runs):
+    """Both runtimes serve the whole tiny trace, so attainment agrees
+    exactly at both extremes: 1.0 against a generous spec, 0.0 against an
+    unattainable one — regardless of their different clocks."""
+    eng, sim = engine_and_sim_runs
+    generous = SLOSpec(ttft_target=1e9, tbt_target=1e9, tier=LATENCY)
+    impossible = SLOSpec(ttft_target=0.0, tbt_target=0.0, tier=LATENCY)
+    for tier in ("latency", "best_effort"):
+        e, s = eng.tier_metrics()[tier], sim.tier_metrics()[tier]
+        assert e.total_tokens > 0 and s.total_tokens > 0
+        assert e.slo_attainment(generous) == s.slo_attainment(generous) == 1.0
+        assert e.slo_attainment(impossible) \
+            == s.slo_attainment(impossible) == 0.0
+
+
+def test_engine_and_sim_tier_partitions_match(engine_and_sim_runs):
+    eng, sim = engine_and_sim_runs
+    assert set(eng.tier_metrics()) == set(sim.tier_metrics()) \
+        == {"latency", "best_effort"}
+    # every tenant's requests land in exactly its spec's tier
+    for runtime in (eng, sim):
+        tm = runtime.tier_metrics()
+        total = sum(m.total_tokens for m in tm.values())
+        assert total == sum(len(r.generated) for r in runtime.finished) > 0

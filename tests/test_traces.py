@@ -2,7 +2,8 @@
 import numpy as np
 
 from repro.serving.traces import (
-    ConversationSpec, TraceSpec, make_trace, multi_turn_trace,
+    ConversationSpec, DiurnalSpec, TraceSpec, diurnal_trace, make_trace,
+    multi_turn_trace,
 )
 
 
@@ -66,3 +67,54 @@ def test_multi_turn_per_spec_streams_are_independent():
     for r1, r2 in zip(solo, multi):
         assert r1.rid == r2.rid and r1.arrival == r2.arrival
         assert np.array_equal(r1.prompt, r2.prompt)
+
+
+# ----------------------------------------------------------- diurnal traces
+def test_diurnal_arrivals_respect_phase_windows():
+    """With off_scale=0 every arrival lands inside the tenant's ON
+    windows; a phase offset of half a period makes two tenants strictly
+    anti-phase."""
+    specs = [
+        DiurnalSpec("a", "alpaca", 8.0, duration=40.0, period=10.0, duty=0.5),
+        DiurnalSpec("b", "alpaca", 8.0, duration=40.0, period=10.0, duty=0.5,
+                    phase=5.0),
+    ]
+    reqs = diurnal_trace(specs, seed=2)
+    a = np.array([r.arrival for r in reqs if r.model == "a"])
+    b = np.array([r.arrival for r in reqs if r.model == "b"])
+    assert len(a) > 10 and len(b) > 10
+    assert np.all(a >= 0) and np.all(a < 40.0)
+    assert np.all((a % 10.0) < 5.0)          # a ON during [0, 5) of each cycle
+    assert np.all((b % 10.0) >= 5.0)         # b ON during [5, 10)
+
+
+def test_diurnal_off_scale_trickle_stays_sparse():
+    on = DiurnalSpec("m", "alpaca", 10.0, duration=30.0, period=10.0,
+                     duty=0.5, off_scale=0.05)
+    reqs = diurnal_trace([on], seed=3)
+    arr = np.array([r.arrival for r in reqs])
+    off = arr[(arr % 10.0) >= 5.0]
+    assert 0 < len(off) < 0.2 * len(arr)     # a trickle, not a second peak
+
+
+def test_diurnal_per_spec_streams_are_independent():
+    a = DiurnalSpec("ma", "sharegpt", 6.0, duration=20.0)
+    b = DiurnalSpec("mb", "alpaca", 6.0, duration=20.0, phase=7.0)
+    solo = _by_model(diurnal_trace([a], seed=9), "ma")
+    multi = _by_model(diurnal_trace([a, b], seed=9), "ma")
+    assert len(solo) == len(multi) > 0
+    for r1, r2 in zip(solo, multi):
+        assert r1.rid == r2.rid and r1.arrival == r2.arrival
+        assert r1.max_new_tokens == r2.max_new_tokens
+        assert np.array_equal(r1.prompt, r2.prompt)
+
+
+def test_diurnal_is_deterministic_per_seed():
+    spec = [DiurnalSpec("m", "alpaca", 8.0, duration=15.0)]
+    t1, t2 = diurnal_trace(spec, seed=4), diurnal_trace(spec, seed=4)
+    assert len(t1) == len(t2) > 0
+    for r1, r2 in zip(t1, t2):
+        assert r1.arrival == r2.arrival
+        assert np.array_equal(r1.prompt, r2.prompt)
+    assert any(x.arrival != y.arrival
+               for x, y in zip(t1, diurnal_trace(spec, seed=5)))

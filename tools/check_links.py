@@ -1,0 +1,66 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the docs CI job.
+
+Scans the given markdown files/directories for inline links and image
+references and verifies that every *relative* target exists in the repo
+(anchors are stripped; absolute URLs and mailto: are skipped — CI must
+not depend on external sites being up). Exits non-zero listing every
+broken link.
+
+  python tools/check_links.py README.md docs
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline markdown links/images: [text](target) / ![alt](target)
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def md_files(args: list[str]) -> list[Path]:
+    out: list[Path] = []
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.md")))
+        else:
+            out.append(p)
+    return out
+
+
+def check(paths: list[Path]) -> list[str]:
+    errors = []
+    for md in paths:
+        if not md.exists():
+            errors.append(f"{md}: file not found")
+            continue
+        text = md.read_text(encoding="utf-8")
+        # fenced code blocks routinely contain example "[x](y)" syntax
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(_SKIP):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (md.parent / rel).exists():
+                errors.append(f"{md}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    paths = md_files(sys.argv[1:] or ["README.md", "docs"])
+    errors = check(paths)
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(paths)} markdown files: "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
