@@ -124,18 +124,22 @@ def fig13_strict_isolation():
 
 # --------------------------------------- Fig 14: vs Pie-style KV swapping
 def fig14_swap_vs_remap():
-    """Single-model (paper: OPT-13b+Alpaca) remap vs swap vs recompute, on a
-    GH200-class link and on a PCIe-class link (paper §3's contrast)."""
-    import dataclasses as _dc
+    """Single-model (paper: OPT-13b+Alpaca) remap vs swap vs recompute,
+    swept across host-link classes via the named ``HardwareSpec`` presets:
+    the GH200 C2C link, the same chip degraded to PCIe Gen5, and a real
+    H100-PCIe part (paper §3's contrast)."""
     rows = []
     from benchmarks.common import frac
     from repro.configs import ARCHS
+    from repro.serving.hw import A100_PCIE, H100_PCIE
     from repro.serving.simulator import SimTenantConfig
-    pcie = _dc.replace(GH200, name="gh200_pcie_link", host_link_bw=64e9)
-    for hw_name, hw in (("gh200", GH200), ("pcie-link", pcie)):
+    for hw_name, hw in (("gh200", GH200),
+                        ("pcie-link", GH200.with_host_link("pcie5")),
+                        ("h100-pcie", H100_PCIE),
+                        ("a100-pcie4", A100_PCIE)):
         for mode in ("vllm", "swap", "mirage"):
             tn = {"granite-3-8b": SimTenantConfig(
-                ARCHS["granite-3-8b"], 128, frac("granite-3-8b", 0.75))}
+                ARCHS["granite-3-8b"], 128, frac("granite-3-8b", 0.75, hw))}
             met, _ = run_sim(tn, trace_for(tn, "sharegpt", 20.0), mode,
                              scheduler="temporal", hw=hw)
             rows.append(["fig14", hw_name, mode, met.p99_tbt, met.p99_ttft,
@@ -415,7 +419,132 @@ def fig20_slo_tiers(out_json: str = None):
     return rows
 
 
+# ---------------------- event-based transfer pipeline + async plan apply
+def fig21_async_pipeline(out_json: str = None):
+    """The per-layer prefetch pipeline vs the scalar/synchronous models.
+
+    Part 1 (analytic): for a remapped model across host-link classes, the
+    no-overlap synchronous step time vs the event pipeline's resolved step
+    time, with the steady-state bubble fraction per buffering depth β —
+    the structure ``max(compute, stream)`` cannot see.
+
+    Part 2 (apply): the first decode step after a tier switch, resolved
+    deterministically through the shared ``PlanDrain`` state machine —
+    synchronous apply serializes the whole cycle->resident transition
+    ahead of the step, incremental apply runs the cold *interim* plan and
+    drains one remap unit per step.
+
+    Part 3 (serving): the single-tenant pressure scenario end-to-end under
+    both apply modes (tail latency and bubble accounting must not
+    regress). Writes BENCH_async_pipeline.json next to this file (or to
+    ``out_json``)."""
+    import json
+    import os
+
+    from repro.configs import ARCHS
+    from repro.core import transfer_pipeline as tpl
+    from repro.serving.perf_model import PerfModel
+
+    rows, analytic, serving = [], [], []
+    model = "granite-3-8b"
+    for link in ("nvlink_c2c", "pcie5", "pcie4"):
+        hw = GH200.with_host_link(link)
+        pm = PerfModel(ARCHS[model], hw)
+        n = pm.repeats
+        t_c = pm.decode_step_time(64, 1024) / n
+        t_f = pm.t_transfer_unit
+        for alpha in (2, 4, 8):
+            for beta in (1, 2):
+                m = min(alpha + beta, n)
+                plan = tpl.uniform_plan(n, alpha, m)
+                timing = tpl.simulate_decode_step(plan, t_c, t_f)
+                sync = tpl.sync_step_time(plan, t_c, t_f)
+                rows.append(["fig21", link, alpha, beta, sync, timing.total,
+                             timing.bubble_fraction, len(timing.misses)])
+                analytic.append({
+                    "link": link, "alpha": alpha, "beta": beta,
+                    "sync_step_s": sync, "pipelined_step_s": timing.total,
+                    "bubble_time_s": timing.bubble_time,
+                    "bubble_fraction": timing.bubble_fraction,
+                    "fetch_misses": len(timing.misses),
+                })
+    emit(rows, ["bench", "link", "alpha", "beta", "sync_step_s",
+                "pipelined_step_s", "bubble_fraction", "fetch_misses"])
+
+    # Part 2: first decode step after a tier switch (revert α -> α-1:
+    # the re-spaced schedule moves layers cycle->resident, each a
+    # layer_bytes host->device load)
+    arows, apply_rec = [], []
+    pm = PerfModel(ARCHS[model], GH200)
+    n = pm.repeats
+    t_f = pm.t_transfer_unit
+    for alpha in (4, 8):
+        old = tpl.make_plan_pipeline(n, alpha, 1.0, 1e-9)
+        new = tpl.make_plan_pipeline(n, alpha - 1, 1.0, 1e-9)
+        drain = tpl.PlanDrain(old, new, pm.unit_bytes)
+        sync_first = pm.decode_step_timing(64, 1024, new, cold=True).total \
+            + drain.transition_bytes / GH200.host_link_bw
+        interim = drain.current_plan
+        incr_first = pm.decode_step_timing(
+            64, 1024, interim, cold=(interim != old)).total
+        arows.append(["fig21", f"revert_a{alpha}", len(drain.to_load),
+                      sync_first, incr_first])
+        apply_rec.append({
+            "transition": f"alpha {alpha}->{alpha - 1}",
+            "layers_to_load": len(drain.to_load),
+            "transition_bytes": drain.transition_bytes,
+            "sync_first_step_s": sync_first,
+            "incremental_first_step_s": incr_first,
+            "drain_steps": len(drain.to_load),
+            "drain_extra_s_per_step": t_f,
+        })
+    emit(arows, ["bench", "transition", "layers_to_load",
+                 "sync_first_step_s", "incremental_first_step_s"])
+
+    srows = []
+    for apply_mode in ("sync", "incremental"):
+        tn = _single_tenant()
+        met, sim = run_sim(tn, trace_for(tn, "sharegpt", 20.0), "mirage",
+                           scheduler="temporal", hw=GH200,
+                           max_remap_fraction=0.3,
+                           incremental_apply=(apply_mode == "incremental"))
+        first = sim.post_decision_first_dt
+        srows.append(["fig21", apply_mode,
+                      max(first) if first else 0.0,
+                      sum(first) / len(first) if first else 0.0,
+                      met.p99_tbt, met.bubble_fraction,
+                      len(sim.controller.decisions_log)])
+        serving.append({
+            "apply": apply_mode,
+            "first_step_after_decision_max_s": max(first) if first else 0.0,
+            "first_step_after_decision_mean_s":
+                sum(first) / len(first) if first else 0.0,
+            "p99_tbt_s": met.p99_tbt,
+            "bubble_time_s": met.bubble_time,
+            "bubble_fraction": met.bubble_fraction,
+            "fetch_miss_events": sim.fetch_miss_events,
+            "decisions": len(sim.controller.decisions_log),
+        })
+    emit(srows, ["bench", "apply", "first_step_max_s", "first_step_mean_s",
+                 "p99_tbt_s", "bubble_fraction", "decisions"])
+
+    path = out_json or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)),
+        "BENCH_async_pipeline.json")
+    with open(path, "w") as f:
+        json.dump({
+            "bench": "fig21_async_pipeline",
+            "workload": f"{model} analytic sweep across HOST_LINKS + "
+                        "single-tenant sharegpt 20 req/s pressure scenario",
+            "analytic": analytic,
+            "apply": apply_rec,
+            "serving": serving}, f, indent=2)
+    print(f"# wrote {path}")
+    return rows + srows
+
+
 ALL = [fig8_temporal, fig9_varied_rates, fig10_varied_inputs, fig11_mru_lru,
        fig12_spatial, fig13_strict_isolation, fig14_swap_vs_remap,
        fig15_layer_selection, fig16_dynamic_reversion, fig17_remap_cap,
-       fig18_prefix_sharing, fig19_chunked_prefill, fig20_slo_tiers]
+       fig18_prefix_sharing, fig19_chunked_prefill, fig20_slo_tiers,
+       fig21_async_pipeline]

@@ -13,5 +13,10 @@ from repro.core.prefix_index import (
     PrefixIndex, PrefixMatch, PrefixNode, PrefixStats,
 )
 from repro.core.transfer_engine import (
-    TransferEngine, split_blocks, merge_blocks, make_fetch,
+    TransferEngine, TransferStats, split_blocks, merge_blocks, make_fetch,
+)
+from repro.core.transfer_pipeline import (
+    FetchMiss, PlanDrain, StepTiming, choose_m_pipeline, identity_plan,
+    make_plan_pipeline, max_alpha_pipeline, plan_bubble,
+    simulate_decode_step, sync_step_time, uniform_plan,
 )

@@ -9,9 +9,13 @@ Per serving-engine iteration (token granularity):
      then best-effort tier, live SLO slack, priority, MRU/LRU; active
      models last).
   3. *how many layers* — α capped per model by (a) the per-model
-     ``max_remap_fraction`` (cold-start guard) and (b) the pipeline
-     feasibility bound ``layer_selection.max_alpha`` given measured T_c and
-     profiled T_T (§5.3: T_T·N ≤ T_compute).
+     ``max_remap_fraction`` (cold-start guard) and (b) the event-pipeline
+     feasibility bound ``transfer_pipeline.max_alpha_pipeline`` given
+     measured T_c and profiled T_T: α is feasible when the simulated
+     per-layer prefetch pipeline streams bubble-free, which honours the
+     minimum circular gap instead of the closed-form scalar inequality
+     T_T·N ≤ T_c (eqs. 4/5 remain in ``layer_selection`` as the analytic
+     reference).
   4. *which layers*    — ``layer_selection.make_plan`` (uniform interval,
      m = α+1 or α+2 per eqs. 4/5).
 
@@ -25,6 +29,7 @@ import dataclasses
 from typing import Dict, List, Optional
 
 from repro.core import layer_selection as ls
+from repro.core import transfer_pipeline as tpl
 from repro.core.metadata_store import MetadataStore, ModelInfo
 from repro.core.remap_policy import next_revert, next_victim
 
@@ -107,8 +112,10 @@ class RemappingController:
                 if not self.cfg.pipeline_cap:
                     caps[m.name] = m.max_alpha_cap
                 else:
-                    # transfers must hide under the model's own decode compute
-                    caps[m.name] = ls.max_alpha(
+                    # transfers must hide under the model's own decode
+                    # compute — decided by the event pipeline's bubble
+                    # estimate, not the scalar T_c >= T_T inequality
+                    caps[m.name] = tpl.max_alpha_pipeline(
                         m.num_layers, t_c, t_t, self.cfg.double_buffer,
                         self.cfg.buffer_mode)
             else:
@@ -145,14 +152,14 @@ class RemappingController:
 
     def _plan(self, m: ModelInfo, alpha: int, t_compute) -> Optional[ls.RemapPlan]:
         if alpha == 0:
-            return ls.RemapPlan(m.num_layers, 0, 0, (), tuple(range(m.num_layers)))
+            return tpl.identity_plan(m.num_layers)
         t_c = t_compute.get(m.name, 0.0)
         t_t = self.t_transfer.get(m.name, float("inf"))
         if m.active:
             try:
-                return ls.make_plan(m.num_layers, alpha, t_c, t_t,
-                                    self.cfg.double_buffer,
-                                    self.cfg.buffer_mode)
+                return tpl.make_plan_pipeline(m.num_layers, alpha, t_c, t_t,
+                                              self.cfg.double_buffer,
+                                              self.cfg.buffer_mode)
             except ValueError:
                 if self.cfg.pipeline_cap:
                     return None

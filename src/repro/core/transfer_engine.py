@@ -17,9 +17,18 @@ Two cooperating mechanisms:
 2. **Host-side tier switching**: increasing α *drops* device layers (no
    copy — the host always holds the full parameter copy, as in vLLM) and
    donates their bytes to the KV allocator; Dynamic Reversion restores them
-   with one unidirectional host->device transfer. ``TransferEngine`` does
-   this bookkeeping and accounts every byte moved (the benchmarks read
-   these counters).
+   over the host link. ``TransferEngine`` does this bookkeeping and
+   accounts every byte moved (the benchmarks read these counters).
+
+   Tier switches are **asynchronous**: ``submit_plan`` records the target
+   and applies the free direction (drops) immediately; the layers that
+   must cross the host link (cycle->resident restores, including
+   re-spacing moves when α changes) drain incrementally via
+   ``advance(budget_bytes)``, which the serving engine drives once per
+   decode step. Mid-drain, ``plans[name]`` / ``fetch_for`` reflect the
+   *interim* plan (pending layers stay in the cycle set), so decode stays
+   correct at every point of the transition — the first decode step after
+   a remap decision no longer serializes on the whole plan.
 """
 from __future__ import annotations
 
@@ -31,6 +40,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.layer_selection import RemapPlan
+from repro.core.transfer_pipeline import (
+    PlanDrain, StepTiming, identity_plan, simulate_decode_step,
+)
 from repro.models.common import is_spec
 
 
@@ -130,49 +142,117 @@ def make_fetch(
 @dataclasses.dataclass
 class TransferStats:
     remap_drops_bytes: int = 0          # device bytes donated to KV
-    revert_bytes: int = 0               # host->device on reversion
+    revert_bytes: int = 0               # donation-level restore debt (Δα)
     stream_bytes: int = 0               # per-token cycling transfers
     tier_switches: int = 0
+    drain_bytes: int = 0                # host->device bytes moved by advance()
+    bubble_time_s: float = 0.0          # modeled pipeline stall (event model)
+    decode_time_s: float = 0.0          # modeled decode time incl. stalls
 
 
 class TransferEngine:
-    """Owns per-model (resident, cycle) stacks + the full host copy."""
+    """Owns per-model (resident, cycle) stacks + the full host copy.
+
+    ``plans[name]`` is always the plan the *split reflects right now* —
+    the interim plan while a submitted tier switch drains, the target once
+    ``advance`` has paid for every cycle->resident load.
+    """
 
     def __init__(self):
         self.host_copy: Dict[str, Any] = {}        # full stacked blocks (host)
         self.split: Dict[str, Tuple[Any, Any, Dict[str, jax.Array]]] = {}
         self.plans: Dict[str, RemapPlan] = {}
         self.layer_bytes: Dict[str, int] = {}
+        self.pending: Dict[str, PlanDrain] = {}
         self.stats = TransferStats()
+        self._target_alpha: Dict[str, int] = {}
+        self._cold: Dict[str, bool] = {}   # plan switched since last decode
 
     def register(self, name: str, blocks, layer_bytes: int) -> None:
         self.host_copy[name] = blocks
         self.layer_bytes[name] = layer_bytes
-        plan = RemapPlan(_repeats(blocks), 0, 0, (),
-                         tuple(range(_repeats(blocks))))
-        self.plans[name] = plan
-        self.split[name] = split_blocks(blocks, plan)
+        self._target_alpha[name] = 0
+        self._install(name, identity_plan(_repeats(blocks)))
 
-    def apply_plan(self, name: str, plan: RemapPlan) -> None:
-        """Tier switch: re-split from the host copy per the new plan."""
-        old = self.plans[name]
+    def _install(self, name: str, plan: RemapPlan) -> None:
         self.plans[name] = plan
         self.split[name] = split_blocks(self.host_copy[name], plan)
+        self._cold[name] = True
+
+    def submit_plan(self, name: str, plan: RemapPlan) -> None:
+        """Begin an async tier switch. Drops (resident->cycle) happen now;
+        loads (cycle->resident) queue behind ``advance``. Re-submitting
+        mid-drain transitions from the current interim plan (in-flight
+        drain progress is discarded — the superseded loads are re-queued
+        if the new target still wants them resident)."""
+        cur = self.pending[name].current_plan if name in self.pending \
+            else self.plans[name]
         lb = self.layer_bytes[name]
-        if plan.alpha > old.alpha:
-            self.stats.remap_drops_bytes += (plan.alpha - old.alpha) * lb
-        elif plan.alpha < old.alpha:
-            self.stats.revert_bytes += (old.alpha - plan.alpha) * lb
+        old_alpha = self._target_alpha[name]
+        if plan.alpha > old_alpha:
+            self.stats.remap_drops_bytes += (plan.alpha - old_alpha) * lb
+        elif plan.alpha < old_alpha:
+            self.stats.revert_bytes += (old_alpha - plan.alpha) * lb
+        self._target_alpha[name] = plan.alpha
         self.stats.tier_switches += 1
+        drain = PlanDrain(cur, plan, lb)
+        if drain.done:
+            self.pending.pop(name, None)
+        else:
+            self.pending[name] = drain
+        # a reversion's interim IS the current plan — skip the no-op
+        # re-split (and the cold-start restart) in that case
+        if drain.current_plan != self.plans[name]:
+            self._install(name, drain.current_plan)
+
+    def advance(self, name: str, budget_bytes) -> int:
+        """Drain up to ``budget_bytes`` of the pending tier switch over the
+        host link. The split stays at the interim plan until the LAST
+        layer is paid for, then hops to the target in one re-split —
+        paid-but-uninstalled layers keep streaming from host (correct,
+        conservatively timed) instead of forcing a full re-split and a
+        fresh jit executable per layer. Returns the bytes consumed."""
+        drain = self.pending.get(name)
+        if drain is None:
+            return 0
+        used, _completed = drain.advance(budget_bytes)
+        self.stats.drain_bytes += used
+        if drain.done:
+            del self.pending[name]
+            self._install(name, drain.target)
+        return used
+
+    def pending_bytes(self, name: str) -> int:
+        """Host->device bytes still owed by an in-flight tier switch."""
+        drain = self.pending.get(name)
+        return drain.remaining_bytes if drain is not None else 0
+
+    def apply_plan(self, name: str, plan: RemapPlan) -> None:
+        """Synchronous tier switch: submit + drain the whole transition."""
+        self.submit_plan(name, plan)
+        self.advance(name, float("inf"))
 
     def fetch_for(self, name: str, device_shardings=None):
         resident, cycle, maps = self.split[name]
         return make_fetch(resident, cycle, maps, device_shardings)
 
-    def note_decode_step(self, name: str) -> None:
-        """Account the per-token streaming traffic of the active plan."""
+    def note_decode_step(self, name: str, t_compute_layer: float = None,
+                         t_fetch_layer: float = None) -> Optional[StepTiming]:
+        """Account the per-token streaming traffic of the active plan.
+        With per-layer compute/fetch times, additionally resolve the step
+        through the shared event pipeline and accumulate the modeled
+        bubble — the same accounting the simulator charges, so both
+        runtimes agree on bubbles for the same plan."""
         plan = self.plans[name]
         self.stats.stream_bytes += plan.m * self.layer_bytes[name]
+        if t_compute_layer is None or t_fetch_layer is None or not plan.m:
+            return None
+        timing = simulate_decode_step(
+            plan, t_compute_layer, t_fetch_layer,
+            cold=self._cold.pop(name, False))
+        self.stats.bubble_time_s += timing.bubble_time
+        self.stats.decode_time_s += timing.total
+        return timing
 
     def params_with_blocks(self, params, name: str):
         """Return params with blocks rebuilt dense (for non-remapped paths)."""

@@ -337,6 +337,11 @@ class ServingEngine:
             pressure |= self._decode(self.tenants[name])
         # 4. MIRAGE / baseline memory management
         self._memory_control(pressure)
+        # 5. async apply queue: pending tier switches drain one remap unit
+        # per step (the link carries about one layer per iteration), so a
+        # decision's first decode step never serializes on the whole plan
+        for n, info in self.store.models.items():
+            self.xfer.advance(n, info.layer_bytes)
 
     # ------------------------------------------------------------- internals
     def _slo_slack(self, now: float) -> Dict[str, float]:
@@ -419,7 +424,7 @@ class ServingEngine:
             drop_cached=self._drop_cached_in_segments if self.prefix else None)
         if outcome not in ("remap", "revert"):
             return
-        self.xfer.apply_plan(d.model, d.plan)
+        self.xfer.submit_plan(d.model, d.plan)
         if outcome == "remap":
             for t in self.tenants.values():     # donated memory becomes pages
                 if t.paged:
@@ -712,13 +717,27 @@ class ServingEngine:
             for r in reqs:
                 pt[r.slot] = t.page_row(self.allocator.seq_pages[r.rid])
             t.state = dict(t.state, page_table=jnp.asarray(pt))
-        remapped = self.store.models[t.name].remapped_alpha > 0
+        # the interim plan mid-drain keeps pending layers in the cycle set,
+        # so the remapped fetch path stays consistent through a tier switch
+        plan = self.xfer.plans[t.name]
+        remapped = plan.m > 0
+        batch = len(reqs)
+        avg_ctx = sum(r.total_len for r in reqs) / batch
         if remapped:
             resident, cycle, maps = self.xfer.split[t.name]
             logits, t.state = self._decode_fn(t, remapped=True)(
                 t.params, resident, cycle, maps, t.state, jnp.asarray(tokens))
-            self.xfer.note_decode_step(t.name)
+            # shared-pipeline bubble accounting (same event model and
+            # inputs the simulator charges for this plan)
+            t_c_layer, t_f_layer = t.perf.pipeline_inputs(
+                batch, avg_ctx, plan)
+            self.xfer.note_decode_step(t.name, t_c_layer, t_f_layer)
         else:
+            # non-remapped steps still count in the modeled decode time,
+            # so bubble_fraction = stall / TOTAL decode time matches the
+            # simulator's denominator
+            self.xfer.stats.decode_time_s += \
+                t.perf.decode_step_time(batch, avg_ctx)
             logits, t.state = self._decode_fn(t)(
                 t.params, t.state, jnp.asarray(tokens))
         choices = np.asarray(jnp.argmax(logits, axis=-1))
@@ -816,8 +835,15 @@ class ServingEngine:
 
     # ---------------------------------------------------------------- report
     def metrics(self) -> ServingMetrics:
-        return ServingMetrics.from_requests(
+        m = ServingMetrics.from_requests(
             self.finished, makespan=float(self.step_idx))
+        st = self.xfer.stats
+        # modeled SECONDS (PerfModel clock) while the engine's latency
+        # metrics count steps — cross-compare via bubble_fraction only
+        m.bubble_time = st.bubble_time_s
+        m.bubble_fraction = (st.bubble_time_s / st.decode_time_s
+                             if st.decode_time_s else 0.0)
+        return m
 
     def tier_metrics(self) -> Dict[str, ServingMetrics]:
         """Tail metrics per SLO tier (engine-step clock)."""

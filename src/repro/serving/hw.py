@@ -13,6 +13,20 @@ from __future__ import annotations
 import dataclasses
 
 
+# Host-link classes (unidirectional bytes/s) — the axis the remap-vs-swap
+# crossover is swept across. Real numbers: PCIe Gen4/Gen5 x16 payload
+# bandwidth, NVLink-C2C per direction (900 GB/s total on GH200).
+PCIE_GEN4_X16_BW = 32e9
+PCIE_GEN5_X16_BW = 64e9
+NVLINK_C2C_BW = 450e9
+
+HOST_LINKS = {
+    "pcie4": PCIE_GEN4_X16_BW,
+    "pcie5": PCIE_GEN5_X16_BW,
+    "nvlink_c2c": NVLINK_C2C_BW,
+}
+
+
 @dataclasses.dataclass(frozen=True)
 class HardwareSpec:
     name: str
@@ -29,6 +43,13 @@ class HardwareSpec:
     @property
     def host_link_bw_bidir(self) -> float:
         return self.host_link_bw * (1.0 - self.bidir_degradation)
+
+    def with_host_link(self, link: str) -> "HardwareSpec":
+        """Same chip behind a different host-link class (``HOST_LINKS``
+        key) — the named constructor benchmarks sweep instead of ad-hoc
+        ``dataclasses.replace`` literals."""
+        return dataclasses.replace(
+            self, name=f"{self.name}_{link}", host_link_bw=HOST_LINKS[link])
 
 
 # Dry-run/roofline target (assignment constants).
@@ -47,15 +68,42 @@ TPU_V5E_PCIE = dataclasses.replace(
     TPU_V5E, name="tpu_v5e_pcie", host_link_bw=64e9)
 
 # GH200 numbers as used in the paper's own evaluation (for the simulator's
-# paper-faithful reproduction mode): H200 GPU-ish compute + 450 GB/s link.
+# paper-faithful reproduction mode): H200 GPU-ish compute + the Grace
+# Hopper NVLink-C2C host link (450 GB/s per direction).
 GH200 = HardwareSpec(
     name="gh200",
     flops_bf16=990e12,
     hbm_bw=4.8e12,
     hbm_bytes=96 * 2**30,
     ici_bw=450e9,
-    host_link_bw=450e9,
+    host_link_bw=NVLINK_C2C_BW,
     host_dram_bytes=224 * 2**30,
 )
 
-SPECS = {s.name: s for s in (TPU_V5E, TPU_V5E_PCIE, GH200)}
+# PCIe-class contrast points (the paper §3 premise: parameter streaming
+# pays on C2C-class links, maybe not on PCIe).
+# H100 PCIe: 756 TFLOP/s dense bf16, 80 GB HBM2e @ 2 TB/s, PCIe Gen5 x16
+# host link, NVLink bridge 600 GB/s.
+H100_PCIE = HardwareSpec(
+    name="h100_pcie",
+    flops_bf16=756e12,
+    hbm_bw=2.0e12,
+    hbm_bytes=80 * 2**30,
+    ici_bw=600e9,
+    host_link_bw=PCIE_GEN5_X16_BW,
+    host_dram_bytes=512 * 2**30,
+)
+
+# A100 80GB PCIe: 312 TFLOP/s bf16, HBM2e @ 1.94 TB/s, PCIe Gen4 x16.
+A100_PCIE = HardwareSpec(
+    name="a100_pcie",
+    flops_bf16=312e12,
+    hbm_bw=1.94e12,
+    hbm_bytes=80 * 2**30,
+    ici_bw=600e9,
+    host_link_bw=PCIE_GEN4_X16_BW,
+    host_dram_bytes=256 * 2**30,
+)
+
+SPECS = {s.name: s for s in (TPU_V5E, TPU_V5E_PCIE, GH200, H100_PCIE,
+                             A100_PCIE)}

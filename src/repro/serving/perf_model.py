@@ -8,9 +8,12 @@ multi-tenant setup; the distributed dry-run path has its own roofline.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 from repro.configs.base import ModelConfig
+from repro.core.layer_selection import RemapPlan
+from repro.core.transfer_pipeline import StepTiming, simulate_decode_step
 from repro.models.lm import block_pattern
 from repro.serving.hw import HardwareSpec
 
@@ -68,17 +71,13 @@ class PerfModel:
         return self.decode_step_time(1, 512) / self.repeats
 
     # ------------------------------------------------------------- decode/TBT
-    def decode_step_time(self, batch: int, avg_ctx: float,
-                         resident_fraction: float = 1.0,
-                         streamed_bytes: int = 0) -> float:
-        """One decode iteration for ``batch`` sequences.
-
-        Decode is bandwidth-bound: every resident parameter byte is read
-        once; KV cache bytes grow with batch*ctx. Compute term uses
-        2*active_params*batch FLOPs. ``streamed_bytes`` (MIRAGE cycling
-        layers) ride the host link concurrently; the iteration takes
-        max(compute, hbm, host-stream) — the pipeline overlaps them.
-        """
+    def _decode_scalar(self, batch: int, avg_ctx: float,
+                       resident_fraction: float = 1.0,
+                       streamed_bytes: int = 0) -> float:
+        """Scalar bandwidth-bound model: every resident parameter byte is
+        read once; KV cache bytes grow with batch*ctx; compute term uses
+        2*active_params*batch FLOPs; streamed bytes ride the host link
+        concurrently — max(compute, hbm, host-stream)."""
         flops = 2.0 * (self.active_param_bytes / self.dtype_bytes) * batch
         t_compute = flops / (self.hw.flops_bf16 * self.hw.mfu_ceiling)
         kv = (kv_bytes_per_token(self.cfg, self.dtype_bytes) * avg_ctx
@@ -88,6 +87,49 @@ class PerfModel:
         t_stream = streamed_bytes / self.hw.host_link_bw
         return max(t_compute, t_hbm, t_stream)
 
+    def pipeline_inputs(self, batch: int, avg_ctx: float,
+                        plan: RemapPlan) -> tuple:
+        """(t_layer_compute, t_layer_fetch) for the shared event pipeline
+        — THE one derivation both runtimes feed it: per-layer compute
+        budget is the bandwidth-bound scalar time / n (HBM term folded
+        in, resident fraction from the plan's α), per-layer fetch is the
+        remap unit's host-link time."""
+        n = max(plan.n, 1)
+        rf = 1.0 - plan.alpha / n
+        return (self._decode_scalar(batch, avg_ctx, rf, 0) / n,
+                self.t_transfer_unit)
+
+    def decode_step_timing(self, batch: int, avg_ctx: float, plan: RemapPlan,
+                           *, cold: bool = False) -> StepTiming:
+        """One decode iteration under ``plan``, resolved by the shared
+        event pipeline (``core/transfer_pipeline``). ``cold=True`` models
+        the first step after a plan switch (no prefetch from a previous
+        iteration)."""
+        t_c, t_f = self.pipeline_inputs(batch, avg_ctx, plan)
+        return simulate_decode_step(plan, t_c, t_f, cold=cold)
+
+    def decode_step_time(self, batch: int, avg_ctx: float,
+                         resident_fraction: float = 1.0,
+                         streamed_bytes: int = 0,
+                         plan: Optional[RemapPlan] = None) -> float:
+        """One decode iteration for ``batch`` sequences.
+
+        With a ``plan`` carrying cycling layers, the event-based pipeline
+        model resolves the iteration (bubbles only when a fetch misses its
+        layer slot). The scalar path serves the non-remapped fast case —
+        and the m=0 pipeline reduces to it exactly (asserted here,
+        property-tested in tests/test_transfer_pipeline.py).
+        """
+        if plan is not None and plan.m:
+            return self.decode_step_timing(batch, avg_ctx, plan).total
+        t = self._decode_scalar(batch, avg_ctx, resident_fraction,
+                                streamed_bytes)
+        if plan is not None:
+            timing = self.decode_step_timing(batch, avg_ctx, plan)
+            assert math.isclose(timing.total, self._decode_scalar(
+                batch, avg_ctx, 1.0, 0), rel_tol=1e-9)
+        return t
+
     def next_token_time(self, batch: int, avg_ctx: float) -> float:
         """Predicted time to the next emitted token for the running batch —
         the earliest-deadline-first signal the SLO scheduler's slack
@@ -95,7 +137,14 @@ class PerfModel:
         return self.decode_step_time(batch, avg_ctx)
 
     # ------------------------------------------------------------ prefill/TTFT
-    def prefill_time(self, prompt_tokens: int, batch: int = 1) -> float:
+    def prefill_time(self, prompt_tokens: int, batch: int = 1,
+                     resident_fraction: float = 1.0,
+                     streamed_bytes: int = 0) -> float:
+        """Prefill is compute-bound with a quadratic attention term. A
+        remapped model reads only its *resident* parameters from HBM and
+        streams the cycling layers over the host link, exactly like
+        decode — a full-``param_bytes`` HBM charge regardless of α would
+        overbill the very model whose layers were donated."""
         flops = 2.0 * (self.active_param_bytes / self.dtype_bytes) \
             * prompt_tokens * batch
         # quadratic attention term
@@ -103,8 +152,9 @@ class PerfModel:
         flops += (2.0 * n_attn * prompt_tokens ** 2 * self.cfg.num_heads
                   * self.cfg.resolved_head_dim * 2 * batch)
         t_compute = flops / (self.hw.flops_bf16 * self.hw.mfu_ceiling)
-        t_hbm = self.param_bytes / self.hw.hbm_bw
-        return max(t_compute, t_hbm)
+        t_hbm = self.param_bytes * resident_fraction / self.hw.hbm_bw
+        t_stream = streamed_bytes / self.hw.host_link_bw
+        return max(t_compute, t_hbm, t_stream)
 
     # -------------------------------------------------------------- cold start
     def reload_time(self, alpha_units: int) -> float:

@@ -77,6 +77,13 @@ class ServingMetrics:
     # prefix sharing (0 when disabled)
     saved_prefill_tokens: int = 0      # prompt tokens served from cached KV
     prefix_hit_rate: float = 0.0       # saved / total prompt tokens
+    # transfer pipeline (0 when never remapped): fetch-miss stall charged
+    # by the event model, filled in by the runtime after aggregation.
+    # bubble_time is ALWAYS in modeled seconds — in the functional engine
+    # (whose other metrics count steps) it comes from the PerfModel, so
+    # only the unitless bubble_fraction is comparable to its step clock
+    bubble_time: float = 0.0           # total stall (modeled seconds)
+    bubble_fraction: float = 0.0       # stall / total modeled decode time
     # per-request (ttft-or-None, max tbt) samples retained so SLO
     # attainment can be evaluated against any spec after the fact
     _per_request: List = dataclasses.field(

@@ -7,8 +7,13 @@ layer-selection feasibility — with simulated time from the analytic
 
 Modes (paper baselines):
   * mirage — parameter remapping: KV capacity grows by α·unit_bytes per
-    victim model; cycling-layer streaming rides the host link under compute
-    (charged as max(compute, stream)); Dynamic Reversion restores params.
+    victim model; cycling-layer streaming rides the host link under compute,
+    resolved per-layer by the shared event pipeline
+    (``core/transfer_pipeline.simulate_decode_step`` — bubble only when a
+    fetch misses its layer slot); Dynamic Reversion restores params through
+    an incremental ``PlanDrain`` (one remap unit per iteration crosses the
+    link) unless ``incremental_apply=False`` recreates the old synchronous
+    apply that charged the whole transition to the decision step.
   * vllm   — fixed capacity; exhaustion preempts the youngest request and
     recomputes it (every running request observes the stall).
   * swap   — Pie-style KV swapping: capacity extends into host DRAM; the
@@ -28,8 +33,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import (
-    ControllerConfig, MemoryInfo, MetadataStore, ModelInfo, PrefixIndex,
-    RemappingController,
+    ControllerConfig, MemoryInfo, MetadataStore, ModelInfo, PlanDrain,
+    PrefixIndex, RemapPlan, RemappingController, identity_plan,
 )
 from repro.serving.hw import HardwareSpec, GH200
 from repro.serving.perf_model import PerfModel, kv_bytes_per_token
@@ -125,11 +130,13 @@ class Simulator:
         step_tokens: int = 0,             # scheduler token budget (0 = inf)
         watermark_tokens: int = DECODE_WATERMARK_TOKENS,
         slack_margin: float = 0.0,        # SLO urgency threshold (seconds)
+        incremental_apply: bool = True,   # False = old synchronous apply
     ):
         assert mode in ("mirage", "vllm", "swap")
         self.mode = mode
         self.hw = hw
         self.uniform_selection = uniform_selection
+        self.incremental_apply = incremental_apply
         self.prefill_chunk_tokens = int(prefill_chunk_tokens)
         self.watermark_tokens = int(watermark_tokens)
         self.slo_specs: Dict[str, SLOSpec] = {
@@ -171,6 +178,20 @@ class Simulator:
         self.finished: List[Request] = []
         self.host_link_busy_s = 0.0
         self.swap_overflow_peak = 0
+        # transfer-pipeline state: the plan in effect per tenant, in-flight
+        # tier-switch drains, and cold-start flags (first step after a
+        # plan change has no prefetch from the previous iteration)
+        self._live_plan: Dict[str, RemapPlan] = {
+            n: identity_plan(t.perf.repeats) for n, t in self.tenants.items()}
+        self._drains: Dict[str, PlanDrain] = {}
+        self._cold: Dict[str, bool] = {}
+        self.bubble_time_s = 0.0       # accumulated fetch-miss stall
+        self.decode_time_s = 0.0       # accumulated decode iteration time
+        self.fetch_miss_events = 0
+        # benchmark probe: wall time of each iteration that carried a
+        # controller decision — synchronous apply serializes the whole
+        # plan transition into it, incremental apply does not
+        self.post_decision_first_dt: List[float] = []
 
     # ------------------------------------------------------------------ run
     def run(self, requests: List[Request], max_time: float = 1e6) -> ServingMetrics:
@@ -223,6 +244,7 @@ class Simulator:
             # first, every tenant's chunks then drain the remainder
             self._prefill_budget = self.scheduler.prefill_budget(
                 sum(len(self.tenants[n].running) for n in active))
+            n_decisions = len(self.controller.decisions_log)
             dt = 0.0
             if self.scheduler.__class__.__name__ == "SpatialScheduler":
                 # concurrent tenants: iteration time = max over tenants
@@ -232,9 +254,16 @@ class Simulator:
                 for n in active:
                     dt += self._tenant_iteration(self.tenants[n])
             dt += self._idle_control()
+            dt += self._advance_drains()
+            if len(self.controller.decisions_log) > n_decisions:
+                self.post_decision_first_dt.append(dt)
             self.now += max(dt, 1e-6)
         makespan = self.now
-        return ServingMetrics.from_requests(self.finished, makespan)
+        met = ServingMetrics.from_requests(self.finished, makespan)
+        met.bubble_time = self.bubble_time_s
+        met.bubble_fraction = (self.bubble_time_s / self.decode_time_s
+                               if self.decode_time_s else 0.0)
+        return met
 
     # ----------------------------------------------------------- iteration
     def _slo_slack(self) -> Dict[str, float]:
@@ -325,7 +354,8 @@ class Simulator:
                 t.prefilling.append(r)
                 continue
             t.running.append(r)
-            tp = t.perf.prefill_time(r.prompt_len - matched)
+            tp = t.perf.prefill_time(r.prompt_len - matched,
+                                     **self._prefill_remap_kw(t))
             dt += max(tp, reload)
             now = self.now + dt
             r.t_first_token = now
@@ -349,7 +379,7 @@ class Simulator:
             if chunk <= 0:
                 continue
             self._prefill_budget -= chunk
-            step = t.perf.prefill_time(chunk)
+            step = t.perf.prefill_time(chunk, **self._prefill_remap_kw(t))
             reload = getattr(r, "_reload_pending", 0.0)
             if reload:
                 step = max(step, reload)
@@ -364,6 +394,27 @@ class Simulator:
                 r.generated.append(0)
                 r.token_times.append(now)
         return dt
+
+    def _current_plan(self, name: str) -> RemapPlan:
+        """Plan in effect for ``name`` — the interim plan mid-drain."""
+        drain = self._drains.get(name)
+        return drain.current_plan if drain is not None \
+            else self._live_plan[name]
+
+    def _prefill_remap_kw(self, t: SimTenant) -> Dict[str, float]:
+        """Remap-aware prefill charging: only resident params read from
+        HBM, cycling layers stream once over the host link. Gated on the
+        LIVE plan, not the store's α — mid-drain the interim plan still
+        streams layers the store already considers restored."""
+        if self.mode != "mirage":
+            return {}
+        plan = self._current_plan(t.name)
+        if not plan.m:
+            return {}
+        return {
+            "resident_fraction": 1.0 - plan.alpha / max(plan.n, 1),
+            "streamed_bytes": plan.m * t.perf.unit_bytes,
+        }
 
     def _decode(self, t: SimTenant) -> float:
         if not t.running:
@@ -380,36 +431,28 @@ class Simulator:
             return stall
         avg_ctx = sum(r.total_len for r in t.running) / batch
         info = self.store.models[t.name]
-        resident_fraction = 1.0 - info.remapped_alpha / max(info.num_layers, 1)
-        streamed = 0
-        bubble = 0.0
-        if self.mode == "mirage" and info.remapped_alpha:
-            n = info.num_layers
-            t_c_layer = t.perf.decode_step_time(batch, avg_ctx) / n
-            t_t = t.perf.t_transfer_unit
-            plan = self.controller._plan(
-                info, info.remapped_alpha, {t.name: t_c_layer})
-            m_layers = plan.m if plan else info.remapped_alpha + 2
-            beta = m_layers - info.remapped_alpha
-            streamed = m_layers * t.perf.unit_bytes
-            self.host_link_busy_s += streamed / self.hw.host_link_bw
-            # pipeline-bubble model (paper eqs. 4/5): per-token stall when
-            # the transfer chain cannot hide under the compute budget.
-            #   beta=1 budget: T_c*(n-alpha-1); beta=2 budget: T_c*n
-            # Contiguous (non-uniform) selection ablation: every transfer
-            # must fit the single wrap-around gap of n-m layers (§5.4).
-            if self.uniform_selection:
-                budget = t_c_layer * (n if beta >= 2 else max(n - info.remapped_alpha - 1, 0))
-            else:
-                budget = t_c_layer * max(n - m_layers, 0)
-            bubble = max(0.0, m_layers * t_t - budget)
-        dt = t.perf.decode_step_time(
-            batch, avg_ctx, resident_fraction, streamed) + bubble
+        plan = self._current_plan(t.name)
+        if self.mode == "mirage" and plan.m:
+            # event-based per-layer prefetch pipeline: bubble only when a
+            # fetch misses its layer slot; the first step after a plan
+            # switch runs cold (no prefetch from the previous iteration)
+            timing = t.perf.decode_step_timing(
+                batch, avg_ctx, plan, cold=self._cold.pop(t.name, False))
+            dt = timing.total
+            self.bubble_time_s += timing.bubble_time
+            self.fetch_miss_events += len(timing.misses)
+            self.host_link_busy_s += plan.m * t.perf.unit_bytes \
+                / self.hw.host_link_bw
+        else:
+            resident_fraction = \
+                1.0 - info.remapped_alpha / max(info.num_layers, 1)
+            dt = t.perf.decode_step_time(batch, avg_ctx, resident_fraction)
         if self.mode == "swap":
             overflow = max(t.kv_used() - t.kv_capacity_base, 0)
             self.swap_overflow_peak = max(self.swap_overflow_peak, overflow)
             dt = max(dt, t.perf.swap_step_time(overflow))
         dt += stall
+        self.decode_time_s += dt
         now = self.now + dt
         for r in list(t.running):
             r.generated.append(0)
@@ -442,6 +485,59 @@ class Simulator:
         t._shared.pop(r.rid, None)
 
     # ------------------------------------------------------------- pressure
+    def _handle_decisions(self, decisions) -> float:
+        """Install each decision's target plan. Incremental apply queues
+        the cycle->resident loads behind a ``PlanDrain`` (advanced one
+        remap unit per iteration by ``_advance_drains``); synchronous
+        apply — the old behaviour, kept for the fig21 comparison — charges
+        the whole transition to this step. Returns stall seconds."""
+        stall = 0.0
+        for d in decisions:
+            t = self.tenants[d.model]
+            target = d.plan
+            if not self.uniform_selection and target.m:
+                # contiguous-selection ablation (§5.4): same m, worst
+                # layout — the event model produces the wrap-gap stall
+                cyc = tuple(range(target.m))
+                target = RemapPlan(
+                    target.n, target.alpha, target.m, cyc,
+                    tuple(range(target.m, target.n)))
+            cur = self._current_plan(d.model)
+            drain = PlanDrain(cur, target, t.perf.unit_bytes)
+            if self.incremental_apply and not drain.done:
+                self._drains[d.model] = drain
+            else:
+                self._drains.pop(d.model, None)
+                self._live_plan[d.model] = target
+                if drain.remaining_bytes:
+                    # synchronous apply: the whole plan transfer serializes
+                    # ahead of the next step
+                    t_load = drain.remaining_bytes / self.hw.host_link_bw
+                    stall += t_load
+                    self.host_link_busy_s += t_load
+            if self._current_plan(d.model) != cur:
+                self._cold[d.model] = True  # schedule changed: cold restart
+        return stall
+
+    def _advance_drains(self) -> float:
+        """Move every pending tier switch forward by one remap unit; the
+        restored bytes cross the same host link the streaming uses, so
+        their transfer time is charged to the iteration."""
+        dt = 0.0
+        for name in list(self._drains):
+            drain = self._drains[name]
+            used, _completed = drain.advance(
+                self.tenants[name].perf.unit_bytes)
+            if used:
+                t_used = used / self.hw.host_link_bw
+                dt += t_used
+                self.host_link_busy_s += t_used
+            if drain.done:
+                del self._drains[name]
+                self._live_plan[name] = drain.target
+                self._cold[name] = True    # plan changed: pipeline restarts
+        return dt
+
     def _on_pressure(self, t: SimTenant) -> float:
         """Returns stall seconds charged to this iteration."""
         if self.mode == "vllm":
@@ -454,27 +550,19 @@ class Simulator:
                 else tt.perf.prefill_time(512) / tt.perf.repeats)
             for n, tt in self.tenants.items()}
         decisions = self.controller.step(kv_pressure=True, t_compute=t_compute)
-        stall = 0.0
-        for d in decisions:
-            if d.reverted:
-                stall += t.perf.reload_time(1)   # unidirectional restore
-        return stall
+        return self._handle_decisions(decisions)
 
     def _idle_control(self) -> float:
         """Dynamic reversion opportunity once per scheduler iteration;
-        returns the (unidirectional) parameter-restore time charged."""
+        returns the stall seconds charged (sync apply only — incremental
+        restores drain through ``_advance_drains``)."""
         if self.mode != "mirage":
             return 0.0
         self._sync_memory()
         t_compute = {n: tt.perf.t_compute_layer_decode
                      for n, tt in self.tenants.items()}
         decisions = self.controller.step(kv_pressure=False, t_compute=t_compute)
-        stall = 0.0
-        for d in decisions:
-            if d.reverted:
-                m = self.store.models[d.model]
-                stall += m.layer_bytes / self.hw.host_link_bw
-        return stall
+        return self._handle_decisions(decisions)
 
     def _preempt_youngest(self, t: SimTenant) -> float:
         """Youngest running request, preferring best-effort tenants: the
