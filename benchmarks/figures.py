@@ -543,8 +543,133 @@ def fig21_async_pipeline(out_json: str = None):
     return rows + srows
 
 
+# ----------------------- multi-replica cluster + coordinated remap
+def fig22_multi_replica(out_json: str = None):
+    """The cluster layer end-to-end: N ``Simulator`` replicas behind a
+    ``Router``, all built from ONE declare-once ``RuntimeConfig``.
+
+    Part 1 (scaling x routing): replicas in {1, 2, 4} x router policy on
+    the diurnal anti-phase two-tier workload — fleet tails merged from
+    pooled per-request samples (``ServingMetrics.merge``).
+
+    Part 2 (coordinated remap, the ROADMAP scenario): 2 replicas on a
+    PCIe5-class host link, where a revert drain's per-iteration transfer
+    is comparable to a decode step. Uncoordinated, both replicas'
+    controllers revert nearly simultaneously (near-identical traffic) and
+    every latency-tier request eats the drain; with
+    ``CoordinatedRemapPolicy`` at most one replica drains at a time and
+    the drain-aware router shifts the chat trickle to its clean twin
+    until the ``PlanDrain`` completes. The headline: coordinated
+    staggering cuts the latency tier's p99 TBT vs uncoordinated
+    simultaneous drains (best-effort throughput pays — fewer reverts
+    keep the batch tenant's layers streaming longer). Writes
+    BENCH_multi_replica.json next to this file (or to ``out_json``)."""
+    import json
+    import os
+
+    from benchmarks.common import frac
+    from repro.cluster import ReplicaGroup, Router
+    from repro.configs import ARCHS
+    from repro.serving import (
+        DiurnalSpec, LATENCY, RuntimeConfig, SLOSpec, TenantSpec,
+    )
+
+    chat_m, batch_m = "granite-3-8b", "llama3-8b"
+    chat_slo = SLOSpec(ttft_target=1.0, tbt_target=0.04, tier=LATENCY)
+    hw = GH200.with_host_link("pcie5")
+
+    def config():
+        return RuntimeConfig(
+            tenants={
+                chat_m: TenantSpec(
+                    ARCHS[chat_m], slo=chat_slo, max_batch=8,
+                    mem_fraction=frac(chat_m, 0.25, hw),
+                    trace=DiurnalSpec(
+                        chat_m, "sharegpt", 16.0, duration=24.0,
+                        period=12.0, duty=0.5, burstiness=3.0,
+                        off_scale=0.25)),
+                batch_m: TenantSpec(
+                    ARCHS[batch_m], max_batch=32,
+                    mem_fraction=frac(batch_m, 1.0, hw),
+                    trace=DiurnalSpec(
+                        batch_m, "alpaca", 12.0, duration=24.0,
+                        period=12.0, duty=0.5, phase=6.0)),
+            },
+            mode="mirage", scheduler="slo", quantum_steps=4,
+            slack_margin=0.04, prefill_chunk_tokens=128, step_tokens=256)
+
+    def run_group(n, policy, coordinate):
+        cfg = config()
+        group = ReplicaGroup.from_config(
+            cfg, n, backend="sim", router=Router(policy),
+            coordinate=coordinate, hw=hw, reversion_hysteresis=0.4)
+        group.run(cfg.trace(seed=11))
+        tm = group.tier_metrics()
+        return group, tm["latency"], tm["best_effort"]
+
+    rows, scaling = [], []
+    for n in (1, 2, 4):
+        for policy in ("least_loaded", "slack_aware", "prefix_affinity"):
+            group, lat, be = run_group(n, policy, False)
+            rows.append(["fig22", n, policy, "uncoord", lat.p99_tbt,
+                         lat.p99_ttft, lat.slo_attainment(chat_slo),
+                         be.throughput_tok_s,
+                         group.simultaneous_drain_ticks])
+            scaling.append({
+                "replicas": n, "router": policy,
+                "latency_p99_tbt_s": lat.p99_tbt,
+                "latency_p99_ttft_s": lat.p99_ttft,
+                "latency_slo_attainment": lat.slo_attainment(chat_slo),
+                "best_effort_throughput_tok_s": be.throughput_tok_s,
+                "drain_ticks": group.drain_ticks,
+                "simultaneous_drain_ticks": group.simultaneous_drain_ticks,
+            })
+    coord_rec = {}
+    for coordinate in (False, True):
+        group, lat, be = run_group(2, "slack_aware", coordinate)
+        label = "coordinated" if coordinate else "uncoordinated"
+        rows.append(["fig22", 2, "slack_aware", label, lat.p99_tbt,
+                     lat.p99_ttft, lat.slo_attainment(chat_slo),
+                     be.throughput_tok_s, group.simultaneous_drain_ticks])
+        coord_rec[label] = {
+            "latency_p99_tbt_s": lat.p99_tbt,
+            "latency_p99_ttft_s": lat.p99_ttft,
+            "latency_slo_attainment": lat.slo_attainment(chat_slo),
+            "best_effort_throughput_tok_s": be.throughput_tok_s,
+            "drain_ticks": group.drain_ticks,
+            "simultaneous_drain_ticks": group.simultaneous_drain_ticks,
+            "reverts": sum(1 for r in group.replicas
+                           for d in r.controller.decisions_log
+                           if d.reverted),
+        }
+    emit(rows, ["bench", "replicas", "router", "remap_coord", "lat_p99_tbt_s",
+                "lat_p99_ttft_s", "lat_slo_attain", "be_tok_per_s",
+                "simult_drain_ticks"])
+    path = out_json or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)),
+        "BENCH_multi_replica.json")
+    with open(path, "w") as f:
+        json.dump({
+            "bench": "fig22_multi_replica",
+            "workload": "diurnal anti-phase: chat 16 req/s sharegpt "
+                        "(SLO: ttft<=1s, tbt<=40ms, off-phase trickle 25%) "
+                        "vs batch 12 req/s alpaca, 12s period 50% duty, "
+                        "GH200 w/ pcie5 host link, slack-aware SLO "
+                        "scheduling, chunk=128",
+            "slo": {"ttft_target_s": chat_slo.ttft_target,
+                    "tbt_target_s": chat_slo.tbt_target},
+            "scaling": scaling,
+            "coordinated_remap": coord_rec,
+            "headline": "coordinated staggered reverts vs uncoordinated "
+                        "simultaneous drains, 2 replicas, slack-aware "
+                        "router: lower latency-tier p99 TBT",
+        }, f, indent=2)
+    print(f"# wrote {path}")
+    return rows
+
+
 ALL = [fig8_temporal, fig9_varied_rates, fig10_varied_inputs, fig11_mru_lru,
        fig12_spatial, fig13_strict_isolation, fig14_swap_vs_remap,
        fig15_layer_selection, fig16_dynamic_reversion, fig17_remap_cap,
        fig18_prefix_sharing, fig19_chunked_prefill, fig20_slo_tiers,
-       fig21_async_pipeline]
+       fig21_async_pipeline, fig22_multi_replica]

@@ -1,0 +1,6 @@
+"""Multi-replica cluster layer over the ``ServingRuntime`` protocol."""
+from repro.cluster.policy import CoordinatedRemapPolicy
+from repro.cluster.replica_group import ReplicaGroup
+from repro.cluster.router import (
+    LEAST_LOADED, PREFIX_AFFINITY, POLICIES, SLACK_AWARE, Router,
+)

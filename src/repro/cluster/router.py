@@ -1,0 +1,99 @@
+"""Remap-aware request routing over ``ServingRuntime`` replicas.
+
+The router is the cluster layer's admission plane: every arrival is
+dispatched to exactly one replica at the moment the fleet's clock reaches
+its arrival time, so routing can react to *live* replica state — load,
+per-tenant SLO slack, and crucially ``draining()``: a replica mid
+remap/revert drain is avoided whenever a non-draining twin exists, which
+is what lets ``CoordinatedRemapPolicy``'s staggered drains pay off (the
+twin absorbs the traffic while the drain completes).
+
+Determinism contract (tested): routing is a pure function of (policy,
+seed, request, replica states) with index-ordered tie-breaks — the same
+trace through the same fleet produces the same assignment map, and
+``prefix_affinity`` is seed-stable across processes (CRC32, not Python's
+salted ``hash``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import zlib
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.serving.request import Request
+
+LEAST_LOADED = "least_loaded"
+SLACK_AWARE = "slack_aware"
+PREFIX_AFFINITY = "prefix_affinity"
+
+POLICIES = (LEAST_LOADED, SLACK_AWARE, PREFIX_AFFINITY)
+
+# prompt tokens hashed for prefix-affinity when a request has no session:
+# one page-ish leading block captures the shareable system prompt
+_AFFINITY_PREFIX_TOKENS = 32
+
+
+@dataclasses.dataclass
+class Router:
+    """Dispatch policy over N replicas.
+
+    * ``least_loaded`` — fewest unfinished requests; ties by KV pressure,
+      then replica index.
+    * ``slack_aware``  — the replica where this request's tenant has the
+      most live SLO slack (the deadline-safest home); ties fall back to
+      least-loaded. Best-effort tenants (inf slack everywhere) therefore
+      get pure least-loaded placement.
+    * ``prefix_affinity`` — sticky hashing on the conversation session
+      (or the leading prompt tokens when no session is set), so multi-turn
+      traffic keeps landing where its prefix cache lives.
+
+    All policies are drain-aware: draining replicas are excluded whenever
+    at least one non-draining replica exists.
+    """
+    policy: str = LEAST_LOADED
+    seed: int = 0
+    # rid -> replica index, recorded for every routed request (assignment
+    # audit + the seed-stability tests)
+    assignments: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(f"unknown router policy {self.policy!r}")
+
+    def route(self, req: Request, replicas: Sequence) -> int:
+        """Pick the replica for ``req`` and record the assignment."""
+        avail = [i for i, rt in enumerate(replicas) if not rt.draining()] \
+            or list(range(len(replicas)))
+        i = avail[0] if len(avail) == 1 else self._pick(req, replicas, avail)
+        self.assignments[req.rid] = i
+        return i
+
+    # ------------------------------------------------------------ policies
+    def _pick(self, req: Request, replicas: Sequence,
+              avail: List[int]) -> int:
+        if self.policy == PREFIX_AFFINITY:
+            home = self._affinity_home(req, len(replicas))
+            return home if home in avail else avail[home % len(avail)]
+        if self.policy == SLACK_AWARE:
+            return min(avail, key=lambda i: (
+                -self._finite_slack(replicas[i], req.model),
+                replicas[i].inflight(), replicas[i].pressure(), i))
+        return min(avail, key=lambda i: (
+            replicas[i].inflight(), replicas[i].pressure(), i))
+
+    @staticmethod
+    def _finite_slack(rt, model: str) -> float:
+        s = rt.tenant_slacks().get(model, math.inf)
+        # inf slacks (best-effort / idle) must tie rather than win: clamp
+        # to one shared sentinel so the least-loaded tie-break decides
+        return min(s, 1e30)
+
+    def _affinity_home(self, req: Request, n: int) -> int:
+        key = req.session if req.session else \
+            np.asarray(req.prompt[:_AFFINITY_PREFIX_TOKENS]).tobytes()
+        if isinstance(key, str):
+            key = key.encode()
+        return zlib.crc32(self.seed.to_bytes(4, "little") + key) % n

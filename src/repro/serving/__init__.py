@@ -1,5 +1,8 @@
 from repro.serving.engine import ServingEngine, TenantConfig
 from repro.serving.request import Request, ServingMetrics
+from repro.serving.runtime import (
+    RuntimeConfig, ServingRuntime, TenantSpec, scale_slo,
+)
 from repro.serving.slo import (
     BEST_EFFORT, LATENCY, SLOSpec, slo_attainment, tenant_slack,
 )

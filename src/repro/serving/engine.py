@@ -22,6 +22,7 @@ assert — remapping must never change results.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -42,9 +43,9 @@ from repro.serving.perf_model import PerfModel
 from repro.serving.request import (
     DECODE_WATERMARK_TOKENS, Request, ServingMetrics,
 )
-from repro.serving.scheduler import make_scheduler
+from repro.serving.scheduler import admission_watermark, make_scheduler
 from repro.serving.slo import (
-    BEST_EFFORT, SLOSpec, request_slack, tenant_slack, tier_rank,
+    SLOSpec, preemption_victim, runtime_tenant_slack, tier_rank,
 )
 
 
@@ -272,7 +273,9 @@ class ServingEngine:
             scheduler, list(self.tenants), quantum_steps=quantum_steps,
             step_tokens=step_tokens, specs=self.slo_specs,
             slack_margin=slack_margin)
+        self._reversion_base = self.controller.cfg.dynamic_reversion
         self.step_idx = 0
+        self._incoming: deque[Request] = deque()
         self.finished: List[Request] = []
         self.events: List[Tuple[int, str, str]] = []   # (step, kind, detail)
         self._elastic_pages: Dict[str, int] = {n: 0 for n in self.tenants}
@@ -290,19 +293,91 @@ class ServingEngine:
                     f"paged mode needs an attention stack: {t.name}"
                 t.init_paged_state(self.allocator.total_pages, page_size)
 
-    # ------------------------------------------------------------------ API
+    # --------------------------------------------- API (ServingRuntime)
     def submit(self, reqs: List[Request]) -> None:
-        self._incoming = deque(sorted(reqs, key=lambda r: r.arrival))
+        """Enqueue arrivals (append-safe incremental ``merge_arrivals``:
+        the cluster router feeds requests as their steps come due)."""
+        from repro.serving.runtime import merge_arrivals
+        self._incoming = merge_arrivals(self._incoming, reqs)
+
+    def busy(self) -> bool:
+        return bool(self._incoming or any(
+            t.queue or t.running() for t in self.tenants.values()))
+
+    def tick(self) -> float:
+        """Advance one scheduling iteration; returns the elapsed steps —
+        1.0 normally, more when the idle fast-forward jumped the clock
+        across an arrival gap."""
+        before = self.step_idx
+        self.step()
+        return float(self.step_idx - before)
+
+    def _idle_jump(self) -> int:
+        """Steps the idle fast-forward would skip before the next step:
+        with no queued/running work and no pending transfer drain (each
+        step drains one unit — skipping steps would freeze it), empty
+        steps are unobservable and the clock may jump so the next step
+        admits the head arrival at its usual ceil(arrival) step index."""
+        if self._incoming and not self.xfer.pending and not any(
+                t.queue or t.running() for t in self.tenants.values()):
+            nxt = int(np.ceil(self._incoming[0].arrival)) - 1
+            if nxt > self.step_idx:
+                return nxt - self.step_idx
+        return 0
+
+    def horizon(self) -> float:
+        """Arrival horizon of the next tick: ``step()`` advances the
+        clock (through the idle fast-forward, if it applies) *before*
+        admitting, so requests with arrival <= that post-advance clock
+        are admitted in the upcoming iteration."""
+        return float(self.step_idx + self._idle_jump()) + 1.0
+
+    def pressure(self) -> float:
+        """KV pool pressure in [0, 1] (used page fraction)."""
+        return self.allocator.used_pages / max(self.allocator.total_pages, 1)
+
+    def inflight(self) -> int:
+        """Requests submitted but not finished (cluster-router load)."""
+        return len(self._incoming) + sum(
+            len(t.queue) + len(t.running()) for t in self.tenants.values())
+
+    def draining(self) -> bool:
+        """A remap/revert tier switch is mid-drain in the TransferEngine."""
+        return bool(self.xfer.pending)
+
+    def tenant_slacks(self) -> Dict[str, float]:
+        """Live per-tenant SLO slack in ENGINE STEPS."""
+        return self._slo_slack(float(self.step_idx))
+
+    def set_reversion_enabled(self, enabled: bool) -> None:
+        """Gate *new* Dynamic Reversion decisions (coordinated remap:
+        a cluster policy staggers revert drains across replicas). The
+        gate can only RESTRICT: a runtime built with reversion disabled
+        stays disabled no matter what a cluster policy grants."""
+        self.controller.cfg.dynamic_reversion = \
+            enabled and self._reversion_base
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
-        while self.step_idx < max_steps and (
-                self._incoming or any(
-                    t.queue or t.running() for t in self.tenants.values())):
+        while self.step_idx < max_steps and self.busy():
             self.step()
+        if self.busy():
+            warnings.warn(
+                f"ServingEngine.run: step budget ({max_steps}) exhausted "
+                f"with {self.inflight()} requests still unfinished — they "
+                "are not in the returned list; see metrics().unfinished",
+                RuntimeWarning, stacklevel=2)
         return self.finished
 
     # ----------------------------------------------------------------- step
     def step(self) -> None:
+        # idle fast-forward (mirrors the simulator's): empty steps are
+        # unobservable, so jump the clock across an arrival gap —
+        # admission lands on the same ceil(arrival) step index the
+        # one-by-one walk would reach, and a lagging cluster replica
+        # heals in one tick instead of gating fleet dispatch. Gated on
+        # xfer.pending: a pending tier switch drains one unit per step,
+        # so the gap is walked normally until the drain completes.
+        self.step_idx += self._idle_jump()
         self.step_idx += 1
         now = float(self.step_idx)
         # 1. admit arrivals (functional time: step index)
@@ -347,31 +422,28 @@ class ServingEngine:
     def _slo_slack(self, now: float) -> Dict[str, float]:
         """Per-tenant slack in ENGINE STEPS: one decode == one step, and a
         chunked prefill takes ceil(remaining prompt / chunk) steps to first
-        token — mid-prefill slots use their own remaining-token estimate,
-        not the queue head's. (The simulator computes the same signal in
-        seconds from its PerfModel — slack ordering is unit-invariant.)"""
+        token — lowered into the shared ``runtime_tenant_slack`` helper
+        (the simulator lowers PerfModel seconds into the same helper;
+        slack ordering is unit-invariant)."""
         chunk = self.prefill_chunk_tokens
         out = {}
         for n, t in self.tenants.items():
-            spec = self.slo_specs[n]
-
             def steps_left(remaining_tokens, chunked=t.paged and chunk > 0):
                 if chunked:
                     return float(-(-max(remaining_tokens, 1) // chunk))
                 return 1.0
 
             head = t.queue[0] if t.queue else None
-            t_first = steps_left(head.prompt_len) if head is not None else 1.0
             running = t.running()
-            slack = tenant_slack(
-                spec, now, t.queue,
-                [r for r in running if not r.prefilling], t_first, 1.0)
-            for r in running:
-                if r.prefilling:
-                    slack = min(slack, request_slack(
-                        r, spec, now,
-                        steps_left(r.prompt_len - r.prefill_pos), 1.0))
-            out[n] = slack
+            out[n] = runtime_tenant_slack(
+                self.slo_specs[n], now, t.queue,
+                [r for r in running if not r.prefilling],
+                [r for r in running if r.prefilling],
+                t_first_head=steps_left(head.prompt_len)
+                if head is not None else 1.0,
+                t_next=1.0,
+                t_first_remaining=lambda r, sl=steps_left: sl(
+                    r.prompt_len - r.prefill_pos))
         return out
 
     def _t_compute(self) -> Dict[str, float]:
@@ -463,12 +535,12 @@ class ServingEngine:
                                   record=False)
                 idx.acquire(match.nodes)
             matched_pages = len(match.pages) if match else 0
-            # vLLM-style admission watermark: keep decode headroom per
-            # running request so decode can always progress (no admission
-            # thrash); applies to every mode. One shared knob with the
-            # simulator: DECODE_WATERMARK_TOKENS.
-            reserve = sum(len(x.running()) for x in self.tenants.values()) \
-                * self.allocator.pages_needed(self.watermark_tokens)
+            # shared admission watermark (scheduler.admission_watermark):
+            # decode headroom per running request, lowered to allocator
+            # pages here and to KV bytes in the simulator
+            reserve = admission_watermark(
+                sum(len(x.running()) for x in self.tenants.values()),
+                self.watermark_tokens, self.allocator.pages_needed)
             need = self.allocator.pages_needed(r.prompt_len + 1) \
                 - matched_pages + reserve
             if need > self.allocator.free_pages:
@@ -779,16 +851,13 @@ class ServingEngine:
 
     # ------------------------------------------------------------ preemption
     def _preempt_one(self, exclude: str = "") -> bool:
-        """vLLM recompute baseline: evict the youngest running request —
-        taken from a best-effort tenant whenever one is running, so the
-        recompute stall lands on the tier without latency targets."""
-        cands = [(r, t) for t in self.tenants.values() for r in t.running()
-                 if r.rid != exclude]
-        if not cands:
+        """vLLM recompute baseline: the shared ``preemption_victim``
+        choice (youngest running, best-effort tenants first)."""
+        r = preemption_victim(
+            (r for t in self.tenants.values() for r in t.running()
+             if r.rid != exclude), self.slo_specs)
+        if r is None:
             return False
-        r, t = max(cands, key=lambda rt: (
-            self.slo_specs[rt[0].model].tier == BEST_EFFORT,
-            rt[0].arrival))
         self._preempt(r)
         return True
 
@@ -843,6 +912,8 @@ class ServingEngine:
         m.bubble_time = st.bubble_time_s
         m.bubble_fraction = (st.bubble_time_s / st.decode_time_s
                              if st.decode_time_s else 0.0)
+        m._decode_time = st.decode_time_s
+        m.unfinished = self.inflight()
         return m
 
     def tier_metrics(self) -> Dict[str, ServingMetrics]:

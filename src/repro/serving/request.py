@@ -84,10 +84,22 @@ class ServingMetrics:
     # only the unitless bubble_fraction is comparable to its step clock
     bubble_time: float = 0.0           # total stall (modeled seconds)
     bubble_fraction: float = 0.0       # stall / total modeled decode time
+    # requests submitted but not finished when the run was truncated
+    # (engine: max_steps exhausted; simulator: max_time) — nonzero means
+    # the latency/throughput numbers above under-count real work
+    unfinished: int = 0
     # per-request (ttft-or-None, max tbt) samples retained so SLO
     # attainment can be evaluated against any spec after the fact
     _per_request: List = dataclasses.field(
         default_factory=list, repr=False, compare=False)
+    # raw pooled samples + denominators retained so ``merge`` can
+    # recompute fleet-level tails from samples, never average tails
+    _tbts: List = dataclasses.field(
+        default_factory=list, repr=False, compare=False)
+    _prompt_tokens: int = dataclasses.field(
+        default=0, repr=False, compare=False)
+    _decode_time: float = dataclasses.field(   # bubble_fraction denominator
+        default=0.0, repr=False, compare=False)
 
     @staticmethod
     def from_requests(reqs: List[Request], makespan: float,
@@ -115,6 +127,51 @@ class ServingMetrics:
             saved_prefill_tokens=saved,
             prefix_hit_rate=saved / prompt_tokens if prompt_tokens else 0.0,
             _per_request=per_request,
+            _tbts=tbts,
+            _prompt_tokens=prompt_tokens,
+        )
+
+    @staticmethod
+    def merge(parts: List["ServingMetrics"]) -> "ServingMetrics":
+        """Fleet-level aggregate over per-replica metrics (``ReplicaGroup``).
+
+        Tails are recomputed from the POOLED per-request samples — an
+        average of per-replica p99s would systematically understate the
+        fleet tail whenever one replica is the straggler. Makespan is the
+        max (replicas run concurrently) and throughput is pooled tokens
+        over that merged makespan. Parts with no samples (a tier that
+        idled on some replica — NaN rows) contribute nothing, so merging
+        all-empty slices stays NaN instead of degrading to zeros."""
+        parts = list(parts)
+        per_request = [s for p in parts for s in p._per_request]
+        ttfts = [t for t, _ in per_request if t is not None]
+        tbts = [x for p in parts for x in p._tbts]
+        tokens = sum(p.total_tokens for p in parts)
+        makespan = max((p.makespan for p in parts), default=0.0)
+        prompt_tokens = sum(p._prompt_tokens for p in parts)
+        saved = sum(p.saved_prefill_tokens for p in parts)
+        bubble = sum(p.bubble_time for p in parts)
+        decode = sum(p._decode_time for p in parts)
+        return ServingMetrics(
+            p99_ttft=percentile(ttfts, 99),
+            p99_tbt=percentile(tbts, 99),
+            p50_ttft=percentile(ttfts, 50),
+            p50_tbt=percentile(tbts, 50),
+            mean_ttft=float(np.mean(ttfts)) if ttfts else float("nan"),
+            throughput_tok_s=tokens / makespan if makespan > 0
+            else float("nan"),
+            total_tokens=tokens,
+            makespan=makespan,
+            preemptions=sum(p.preemptions for p in parts),
+            saved_prefill_tokens=saved,
+            prefix_hit_rate=saved / prompt_tokens if prompt_tokens else 0.0,
+            bubble_time=bubble,
+            bubble_fraction=bubble / decode if decode else 0.0,
+            unfinished=sum(p.unfinished for p in parts),
+            _per_request=per_request,
+            _tbts=tbts,
+            _prompt_tokens=prompt_tokens,
+            _decode_time=decode,
         )
 
     def slo_attainment(self, spec: SLOSpec) -> float:

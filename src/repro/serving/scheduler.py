@@ -144,6 +144,16 @@ class SLOScheduler(Scheduler):
         return self._rr.schedule(pending, running, now)
 
 
+def admission_watermark(occupied_slots: int, watermark_tokens: int,
+                        tokens_to_units) -> int:
+    """vLLM-style admission watermark shared by both runtimes: decode
+    headroom reserved per occupied batch slot so decode can always
+    progress without admission thrash. ``tokens_to_units`` lowers the
+    token knob into the runtime's allocation unit — allocator pages in
+    the engine (``pages_needed``), KV bytes in the simulator."""
+    return occupied_slots * tokens_to_units(watermark_tokens)
+
+
 def make_scheduler(kind: str, models: Sequence[str], **kw) -> Scheduler:
     """Build a scheduler; irrelevant keyword args for the chosen kind are
     dropped so callers (engine/simulator) can pass one uniform kwargs set."""

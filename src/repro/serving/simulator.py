@@ -26,6 +26,7 @@ TemporalScheduler / SpatialScheduler objects as the functional engine.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import deque
 from typing import Dict, List, Optional, Tuple
 
@@ -41,9 +42,9 @@ from repro.serving.perf_model import PerfModel, kv_bytes_per_token
 from repro.serving.request import (
     DECODE_WATERMARK_TOKENS, Request, ServingMetrics,
 )
-from repro.serving.scheduler import make_scheduler
+from repro.serving.scheduler import admission_watermark, make_scheduler
 from repro.serving.slo import (
-    BEST_EFFORT, SLOSpec, request_slack, tenant_slack,
+    SLOSpec, preemption_victim, runtime_tenant_slack,
 )
 
 
@@ -174,7 +175,14 @@ class Simulator:
             step_tokens=step_tokens, specs=self.slo_specs,
             slack_margin=slack_margin)
         self.now = 0.0
+        self._reversion_base = dynamic_reversion
         self._prefill_budget = 0       # per-iteration, shared by tenants
+        self._incoming: deque = deque()
+        # tick-loop guard state (hoisted out of the old monolithic run()
+        # so the iteration body is one protocol-visible tick())
+        self._idle_guard = 0
+        self._no_progress = 0
+        self._tokens_done = -1
         self.finished: List[Request] = []
         self.host_link_busy_s = 0.0
         self.swap_overflow_peak = 0
@@ -193,101 +201,171 @@ class Simulator:
         # plan transition into it, incremental apply does not
         self.post_decision_first_dt: List[float] = []
 
-    # ------------------------------------------------------------------ run
-    def run(self, requests: List[Request], max_time: float = 1e6) -> ServingMetrics:
-        incoming = deque(sorted(requests, key=lambda r: r.arrival))
-        idle_guard = 0
-        no_progress = 0
-        tokens_done = -1
-        while (incoming or any(t.queue or t.running or t.prefilling
-                               for t in self.tenants.values())):
-            # starvation guard: a head request that can never fit (tenant
-            # mis-sized for vllm mode) is dropped as failed after a bound
-            tok_now = sum(len(r.generated) for t in self.tenants.values()
-                          for r in t.running) + len(self.finished) \
-                + sum(r.prompt_len - r._prefill_left
-                      for t in self.tenants.values() for r in t.prefilling)
-            no_progress = no_progress + 1 if tok_now == tokens_done else 0
-            tokens_done = tok_now
-            if no_progress > 10_000:
-                for t in self.tenants.values():
-                    if t.queue and not t.running and not t.prefilling:
-                        r = t.queue.popleft()
-                        r.finished = True
-                        self.finished.append(r)
-                no_progress = 0
-                continue
-            if self.now > max_time or idle_guard > 2_000_000:
-                break
-            while incoming and incoming[0].arrival <= self.now:
-                r = incoming.popleft()
-                self.tenants[r.model].queue.append(r)
-            if self._slo_enabled:
-                slacks = self._slo_slack()
-                self.store.note_slack(slacks)
-                self.scheduler.observe_slack(slacks)
-            pending = {n: len(t.queue) for n, t in self.tenants.items()}
-            running = {n: len(t.running) + len(t.prefilling)
-                       for n, t in self.tenants.items()}
-            active = self.scheduler.schedule(pending, running, self.now)
-            self.store.mark_active(active)
-            if not active:
-                # fast-forward to next arrival
-                if incoming:
-                    self.now = max(self.now, incoming[0].arrival)
-                idle_guard += 1
-                continue
-            idle_guard = 0
-            self._sync_memory()
-            # ONE shared prefill budget per iteration (mirrors the
-            # engine): decode tokens of the active tenants are charged
-            # first, every tenant's chunks then drain the remainder
-            self._prefill_budget = self.scheduler.prefill_budget(
-                sum(len(self.tenants[n].running) for n in active))
-            n_decisions = len(self.controller.decisions_log)
-            dt = 0.0
-            if self.scheduler.__class__.__name__ == "SpatialScheduler":
-                # concurrent tenants: iteration time = max over tenants
-                dts = [self._tenant_iteration(self.tenants[n]) for n in active]
-                dt = max(dts) if dts else 0.0
-            else:
-                for n in active:
-                    dt += self._tenant_iteration(self.tenants[n])
-            dt += self._idle_control()
-            dt += self._advance_drains()
-            if len(self.controller.decisions_log) > n_decisions:
-                self.post_decision_first_dt.append(dt)
-            self.now += max(dt, 1e-6)
-        makespan = self.now
-        met = ServingMetrics.from_requests(self.finished, makespan)
+    # --------------------------------------------- API (ServingRuntime)
+    def submit(self, reqs: List[Request]) -> None:
+        """Enqueue arrivals (append-safe incremental ``merge_arrivals``:
+        the cluster router feeds requests as their times come due)."""
+        from repro.serving.runtime import merge_arrivals
+        self._incoming = merge_arrivals(self._incoming, reqs)
+
+    def busy(self) -> bool:
+        return bool(self._incoming or any(
+            t.queue or t.running or t.prefilling
+            for t in self.tenants.values()))
+
+    def horizon(self) -> float:
+        """Arrival horizon of the next tick: admission compares against
+        the CURRENT clock (``now`` advances after the iteration body), so
+        requests with arrival <= now are admitted in the upcoming tick."""
+        return self.now
+
+    def pressure(self) -> float:
+        """Fleet-comparable KV pressure in [0, 1]: used KV bytes over the
+        currently available (mode-adjusted) capacity."""
+        used = sum(t.kv_used() for t in self.tenants.values())
+        cap = sum(self._capacity(t) for t in self.tenants.values())
+        return used / cap if cap else 0.0
+
+    def inflight(self) -> int:
+        """Requests submitted but not finished (cluster-router load)."""
+        return len(self._incoming) + sum(
+            len(t.queue) + len(t.running) + len(t.prefilling)
+            for t in self.tenants.values())
+
+    def draining(self) -> bool:
+        """A remap/revert plan transition is mid-drain."""
+        return bool(self._drains)
+
+    def tenant_slacks(self) -> Dict[str, float]:
+        """Live per-tenant SLO slack in SECONDS."""
+        return self._slo_slack()
+
+    def set_reversion_enabled(self, enabled: bool) -> None:
+        """Gate *new* Dynamic Reversion decisions (coordinated remap:
+        a cluster policy staggers revert drains across replicas). The
+        gate can only RESTRICT: a runtime built with reversion disabled
+        stays disabled no matter what a cluster policy grants."""
+        self.controller.cfg.dynamic_reversion = \
+            enabled and self._reversion_base
+
+    def tick(self) -> float:
+        """One scheduling iteration; returns the elapsed simulated
+        seconds (0.0 for pure bookkeeping iterations: starvation-guard
+        drops and idle fast-forwards, which move the clock directly)."""
+        # starvation guard: a head request that can never fit (tenant
+        # mis-sized for vllm mode) is dropped as failed after a bound
+        tok_now = sum(len(r.generated) for t in self.tenants.values()
+                      for r in t.running) + len(self.finished) \
+            + sum(r.prompt_len - r._prefill_left
+                  for t in self.tenants.values() for r in t.prefilling)
+        self._no_progress = \
+            self._no_progress + 1 if tok_now == self._tokens_done else 0
+        self._tokens_done = tok_now
+        if self._no_progress > 10_000:
+            for t in self.tenants.values():
+                if t.queue and not t.running and not t.prefilling:
+                    r = t.queue.popleft()
+                    r.finished = True
+                    self.finished.append(r)
+            self._no_progress = 0
+            return 0.0
+        while self._incoming and self._incoming[0].arrival <= self.now:
+            r = self._incoming.popleft()
+            self.tenants[r.model].queue.append(r)
+        if self._slo_enabled:
+            slacks = self._slo_slack()
+            self.store.note_slack(slacks)
+            self.scheduler.observe_slack(slacks)
+        pending = {n: len(t.queue) for n, t in self.tenants.items()}
+        running = {n: len(t.running) + len(t.prefilling)
+                   for n, t in self.tenants.items()}
+        active = self.scheduler.schedule(pending, running, self.now)
+        self.store.mark_active(active)
+        if not active:
+            # an in-flight tier switch keeps draining while the fleet
+            # idles — the host link is free, and a replica frozen in
+            # draining() state would eat the cluster policy's drain
+            # budget (and the router's avoidance) forever
+            dt = self._advance_drains()
+            if dt:
+                self.now += dt
+                return dt
+            # fast-forward to next arrival
+            if self._incoming:
+                self.now = max(self.now, self._incoming[0].arrival)
+            self._idle_guard += 1
+            return 0.0
+        self._idle_guard = 0
+        self._sync_memory()
+        # ONE shared prefill budget per iteration (mirrors the
+        # engine): decode tokens of the active tenants are charged
+        # first, every tenant's chunks then drain the remainder
+        self._prefill_budget = self.scheduler.prefill_budget(
+            sum(len(self.tenants[n].running) for n in active))
+        n_decisions = len(self.controller.decisions_log)
+        dt = 0.0
+        if self.scheduler.__class__.__name__ == "SpatialScheduler":
+            # concurrent tenants: iteration time = max over tenants
+            dts = [self._tenant_iteration(self.tenants[n]) for n in active]
+            dt = max(dts) if dts else 0.0
+        else:
+            for n in active:
+                dt += self._tenant_iteration(self.tenants[n])
+        dt += self._idle_control()
+        dt += self._advance_drains()
+        if len(self.controller.decisions_log) > n_decisions:
+            self.post_decision_first_dt.append(dt)
+        dt = max(dt, 1e-6)
+        self.now += dt
+        return dt
+
+    def metrics(self) -> ServingMetrics:
+        met = ServingMetrics.from_requests(self.finished, self.now)
         met.bubble_time = self.bubble_time_s
         met.bubble_fraction = (self.bubble_time_s / self.decode_time_s
                                if self.decode_time_s else 0.0)
+        met._decode_time = self.decode_time_s
+        met.unfinished = self.inflight()
         return met
+
+    def run(self, requests: Optional[List[Request]] = None,
+            max_time: float = 1e6) -> ServingMetrics:
+        if requests is not None:
+            self.submit(requests)
+        while self.busy():
+            if self.now > max_time or self._idle_guard > 2_000_000:
+                break
+            self.tick()
+        if self.busy():
+            warnings.warn(
+                f"Simulator.run: time budget exhausted with "
+                f"{self.inflight()} requests still unfinished — their "
+                "latency never enters the tails; see metrics().unfinished",
+                RuntimeWarning, stacklevel=2)
+        return self.metrics()
 
     # ----------------------------------------------------------- iteration
     def _slo_slack(self) -> Dict[str, float]:
-        """Per-tenant slack in SECONDS: earliest deadline minus
-        PerfModel-predicted service time (``next_token_time`` for running
-        requests, ``prefill_time`` of the queue head for TTFT; a
-        mid-prefill request's TTFT deadline uses the prefill time of its
-        *remaining* tokens, not the queue head's)."""
+        """Per-tenant slack in SECONDS: PerfModel-predicted service times
+        (``next_token_time`` for running requests, ``prefill_time`` of the
+        queue head / remaining prompt for TTFT) lowered into the shared
+        ``runtime_tenant_slack`` helper (the engine lowers step counts
+        into the same helper; slack ordering is unit-invariant)."""
         out = {}
         for n, t in self.tenants.items():
-            spec = self.slo_specs[n]
             batch = max(len(t.running), 1)
             avg_ctx = (sum(r.total_len for r in t.running) / len(t.running)) \
                 if t.running else 512.0
             t_next = t.perf.next_token_time(batch, avg_ctx)
             head = t.queue[0] if t.queue else None
-            t_first = t.perf.prefill_time(head.prompt_len) if head else 0.0
-            slack = tenant_slack(spec, self.now, t.queue, t.running,
-                                 t_first, t_next)
-            for r in t.prefilling:
-                slack = min(slack, request_slack(
-                    r, spec, self.now,
-                    t.perf.prefill_time(max(r._prefill_left, 1)), t_next))
-            out[n] = slack
+            out[n] = runtime_tenant_slack(
+                self.slo_specs[n], self.now, t.queue, t.running,
+                t.prefilling,
+                t_first_head=t.perf.prefill_time(head.prompt_len)
+                if head else 0.0,
+                t_next=t_next,
+                t_first_remaining=lambda r, p=t.perf: p.prefill_time(
+                    max(r._prefill_left, 1)))
         return out
 
     def _capacity(self, t: SimTenant) -> int:
@@ -320,12 +398,13 @@ class Simulator:
                 # pin the path so our own reclaim below can't evict it
                 t.index.acquire(match.nodes)
             matched = match.tokens if match else 0
-            # vLLM-style watermark: leave decode headroom per occupied slot
-            # (mid-prefill requests will decode soon) so admission can
-            # never thrash against decode preemptions. One shared knob
-            # with the engine: DECODE_WATERMARK_TOKENS.
-            headroom = self.watermark_tokens \
-                * (len(t.running) + len(t.prefilling)) * t.kv_token_bytes
+            # shared admission watermark (scheduler.admission_watermark):
+            # decode headroom per occupied slot (mid-prefill requests will
+            # decode soon), lowered to KV bytes here and to allocator
+            # pages in the engine
+            headroom = admission_watermark(
+                len(t.running) + len(t.prefilling), self.watermark_tokens,
+                lambda tok: tok * t.kv_token_bytes)
             need = (r.total_len - matched + 1) * t.kv_token_bytes + headroom
             if t.kv_used() + need > self._capacity(t):
                 t.cache_reclaim(t.kv_used() + need - self._capacity(t))
@@ -565,14 +644,14 @@ class Simulator:
         return self._handle_decisions(decisions)
 
     def _preempt_youngest(self, t: SimTenant) -> float:
-        """Youngest running request, preferring best-effort tenants: the
-        recompute stall lands on the tier without latency targets (mirrors
-        the engine's ``_preempt_one``)."""
-        cands = [r for tt in self.tenants.values() for r in tt.running]
-        if not cands:
+        """The shared ``preemption_victim`` choice (youngest running,
+        best-effort tenants first — same key as the engine's
+        ``_preempt_one``)."""
+        victim = preemption_victim(
+            (r for tt in self.tenants.values() for r in tt.running),
+            self.slo_specs)
+        if victim is None:
             return 0.0
-        victim = max(cands, key=lambda r: (
-            self.slo_specs[r.model].tier == BEST_EFFORT, r.arrival))
         vt = self.tenants[victim.model]
         vt.running.remove(victim)
         victim.preemptions += 1

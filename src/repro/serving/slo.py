@@ -88,6 +88,38 @@ def tenant_slack(spec: SLOSpec, now: float, queued: Iterable,
     return slack
 
 
+def runtime_tenant_slack(spec: SLOSpec, now: float, queued: Iterable,
+                         running: Iterable, prefilling: Iterable, *,
+                         t_first_head: float, t_next: float,
+                         t_first_remaining) -> float:
+    """THE per-tenant slack computation shared by both runtimes,
+    parameterized by the runtime's service-time estimates: the functional
+    engine feeds step counts (one decode == one step, chunked prefill ==
+    ceil(remaining/chunk) steps), the simulator feeds PerfModel seconds.
+
+    ``queued``'s head carries the tenant's earliest TTFT deadline served
+    in ``t_first_head``; ``running`` requests carry TBT deadlines served
+    in ``t_next``; ``prefilling`` (mid-prefill, admitted but before first
+    token) requests keep their TTFT deadline with the remaining-prompt
+    estimate ``t_first_remaining(r)`` — not the queue head's.
+    """
+    slack = tenant_slack(spec, now, queued, running, t_first_head, t_next)
+    for r in prefilling:
+        slack = min(slack, request_slack(
+            r, spec, now, t_first_remaining(r), t_next))
+    return slack
+
+
+def preemption_victim(candidates: Iterable, specs: Dict[str, "SLOSpec"]):
+    """Pick the recompute-preemption victim shared by both runtimes'
+    vLLM baseline: the youngest running request, preferring best-effort
+    tenants whenever one is running, so the recompute stall lands on the
+    tier without latency targets. Returns None when nothing is running."""
+    return max(candidates,
+               key=lambda r: (specs[r.model].tier == BEST_EFFORT, r.arrival),
+               default=None)
+
+
 def slo_attainment(ttfts: List[Optional[float]], max_tbts: List[float],
                    spec: SLOSpec) -> float:
     """Fraction of requests meeting BOTH targets (request-level: one late

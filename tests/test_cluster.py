@@ -1,0 +1,367 @@
+"""Cluster layer: router policies (determinism, drain-awareness),
+coordinated remap staggering, and the single-replica transparency
+contract — a 1-replica group must be byte-identical to the bare runtime,
+for BOTH backends, or the cluster layer silently changes the physics it
+claims to only orchestrate."""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    CoordinatedRemapPolicy, LEAST_LOADED, PREFIX_AFFINITY, ReplicaGroup,
+    Router, SLACK_AWARE,
+)
+from repro.configs import ARCHS, scaled_config
+from repro.models import build_model
+from repro.serving import (
+    LATENCY, RuntimeConfig, SLOSpec, TenantSpec,
+)
+from repro.serving.request import Request, ServingMetrics
+from repro.serving.traces import DiurnalSpec, TraceSpec, tiny_trace
+
+
+# ------------------------------------------------------- fake replicas
+class FakeReplica:
+    """Minimal ServingRuntime stand-in for router/policy unit tests."""
+
+    def __init__(self, load=0, pressure=0.0, draining=False, slacks=None):
+        self._load = load
+        self._pressure = pressure
+        self._draining = draining
+        self._slacks = slacks or {}
+        self.reversion_enabled = True
+        self.submitted = []
+
+    def submit(self, reqs):
+        self.submitted.extend(reqs)
+
+    def tick(self):
+        return 0.0
+
+    def busy(self):
+        return False
+
+    def horizon(self):
+        return 0.0
+
+    def pressure(self):
+        return self._pressure
+
+    def inflight(self):
+        return self._load
+
+    def draining(self):
+        return self._draining
+
+    def tenant_slacks(self):
+        return dict(self._slacks)
+
+    def set_reversion_enabled(self, enabled):
+        self.reversion_enabled = enabled
+
+    def metrics(self):
+        return ServingMetrics.from_requests([], 0.0)
+
+    def tier_metrics(self):
+        return {}
+
+
+def _req(rid="r0", model="m", session=""):
+    return Request(rid=rid, model=model, prompt=np.arange(8, dtype=np.int32),
+                   max_new_tokens=4, session=session)
+
+
+# ------------------------------------------------------- router policies
+def test_router_least_loaded_prefers_emptiest_then_index():
+    reps = [FakeReplica(load=3), FakeReplica(load=1), FakeReplica(load=1)]
+    r = Router(LEAST_LOADED)
+    assert r.route(_req(), reps) == 1          # tie on load -> lower index
+    reps[1]._pressure = 0.9
+    assert r.route(_req("r1"), reps) == 2      # pressure breaks the tie
+
+
+def test_router_avoids_draining_replicas():
+    reps = [FakeReplica(load=0, draining=True), FakeReplica(load=5)]
+    assert Router(LEAST_LOADED).route(_req(), reps) == 1
+    # every replica draining: routing must still succeed
+    reps[1]._draining = True
+    assert Router(LEAST_LOADED).route(_req("r1"), reps) == 0
+
+
+def test_router_slack_aware_picks_max_slack_home():
+    reps = [FakeReplica(slacks={"m": 0.1}), FakeReplica(slacks={"m": 5.0})]
+    assert Router(SLACK_AWARE).route(_req(), reps) == 1
+    # inf slacks (best-effort tenant) tie -> least-loaded decides
+    reps = [FakeReplica(load=4, slacks={"m": math.inf}),
+            FakeReplica(load=1, slacks={"m": math.inf})]
+    assert Router(SLACK_AWARE).route(_req("r1"), reps) == 1
+
+
+def test_router_prefix_affinity_is_sticky_and_seed_stable():
+    reps = [FakeReplica(), FakeReplica(), FakeReplica()]
+    r = Router(PREFIX_AFFINITY, seed=7)
+    homes = {s: r.route(_req(f"r{s}", session=s), reps)
+             for s in ("sess-a", "sess-b", "sess-c")}
+    # same session -> same home, across a fresh router with the same seed
+    r2 = Router(PREFIX_AFFINITY, seed=7)
+    for s, home in homes.items():
+        assert r2.route(_req(f"x{s}", session=s), reps) == home
+    # a different seed may relocate sessions (it is part of the hash)
+    assert Router(PREFIX_AFFINITY, seed=8)._affinity_home(
+        _req(session="sess-a"), 3) != \
+        Router(PREFIX_AFFINITY, seed=7)._affinity_home(
+            _req(session="sess-a"), 3) or True   # allowed to collide
+    # sessionless requests hash their leading prompt tokens
+    a = Router(PREFIX_AFFINITY, seed=7)._affinity_home(_req(), 3)
+    assert a == Router(PREFIX_AFFINITY, seed=7)._affinity_home(_req(), 3)
+
+
+def test_router_rejects_unknown_policy():
+    with pytest.raises(ValueError, match="policy"):
+        Router("round_robin")
+
+
+def test_router_records_assignments():
+    reps = [FakeReplica(), FakeReplica()]
+    r = Router(LEAST_LOADED)
+    r.route(_req("a"), reps)
+    r.route(_req("b"), reps)
+    assert set(r.assignments) == {"a", "b"}
+
+
+# --------------------------------------------------- coordinated remap
+def test_coordination_grants_at_most_one_new_drain():
+    reps = [FakeReplica(), FakeReplica(), FakeReplica()]
+    pol = CoordinatedRemapPolicy(max_concurrent_drains=1)
+    pol.apply(reps)
+    assert sum(r.reversion_enabled for r in reps) == 1
+    # sticky: the same holder keeps the grant on the next tick (patience
+    # accumulation requires CONSECUTIVE enabled steps)
+    holder = next(i for i, r in enumerate(reps) if r.reversion_enabled)
+    pol.apply(reps)
+    assert reps[holder].reversion_enabled
+    assert sum(r.reversion_enabled for r in reps) == 1
+
+
+def test_coordination_lets_inflight_drains_finish():
+    reps = [FakeReplica(draining=True), FakeReplica(draining=True),
+            FakeReplica()]
+    pol = CoordinatedRemapPolicy(max_concurrent_drains=1)
+    pol.apply(reps)
+    # both in-flight drains keep their grant; no NEW grant (budget <= 0)
+    assert reps[0].reversion_enabled and reps[1].reversion_enabled
+    assert not reps[2].reversion_enabled
+
+
+def test_coordination_lease_rotates_past_idle_holder():
+    """A holder that never starts a drain (nothing to revert) cedes the
+    grant after grant_lease ticks, so its twin is not starved of
+    reversion indefinitely."""
+    reps = [FakeReplica(), FakeReplica()]
+    pol = CoordinatedRemapPolicy(max_concurrent_drains=1, grant_lease=5)
+    for _ in range(5):
+        pol.apply(reps)
+        assert reps[0].reversion_enabled and not reps[1].reversion_enabled
+    for _ in range(2):
+        pol.apply(reps)                 # lease expired: cursor rotated
+    assert reps[1].reversion_enabled and not reps[0].reversion_enabled
+
+
+def test_coordination_lease_pauses_while_budget_is_zero():
+    """The lease only burns while the grant is usable: with the twin
+    draining (budget 0), the cursor must NOT rotate back onto the
+    still-draining replica however long the drain runs."""
+    reps = [FakeReplica(draining=True), FakeReplica()]
+    pol = CoordinatedRemapPolicy(max_concurrent_drains=1, grant_lease=3)
+    pol.apply(reps)
+    assert pol._grant == 1                     # hand-off to the twin
+    for _ in range(10):                        # far past the lease
+        pol.apply(reps)
+    assert pol._grant == 1                     # paused, not rotated
+    reps[0]._draining = False
+    for _ in range(4):                         # now the lease burns
+        pol.apply(reps)
+    assert pol._grant == 0
+
+
+def test_coordination_cursor_advances_when_holder_drains():
+    reps = [FakeReplica(), FakeReplica()]
+    pol = CoordinatedRemapPolicy(max_concurrent_drains=1)
+    pol.apply(reps)
+    assert reps[0].reversion_enabled and not reps[1].reversion_enabled
+    reps[0]._draining = True                   # holder started its drain
+    pol.apply(reps)
+    assert pol._grant == 1                     # cursor moved to the twin
+    assert reps[0].reversion_enabled           # finishes what it started
+    assert not reps[1].reversion_enabled       # budget consumed by 0
+    reps[0]._draining = False
+    pol.apply(reps)
+    assert reps[1].reversion_enabled and not reps[0].reversion_enabled
+
+
+# --------------------------------------------- single-replica equivalence
+@pytest.fixture(scope="module")
+def sim_config():
+    return RuntimeConfig(
+        tenants={
+            "chat": TenantSpec(ARCHS["granite-3-8b"], mem_fraction=0.3,
+                               max_batch=8,
+                               slo=SLOSpec(1.0, 0.04, LATENCY),
+                               trace=DiurnalSpec("chat", "sharegpt", 8.0,
+                                                 duration=8.0, period=4.0)),
+            "batch": TenantSpec(ARCHS["llama3-8b"], mem_fraction=0.5,
+                                max_batch=16,
+                                trace=TraceSpec("batch", "alpaca", 6.0,
+                                                duration=8.0)),
+        },
+        mode="mirage", scheduler="slo", quantum_steps=4, slack_margin=0.04)
+
+
+def _per_request(finished):
+    return {r.rid: (r.ttft(), tuple(r.token_times)) for r in finished}
+
+
+@pytest.mark.parametrize("policy", [LEAST_LOADED, SLACK_AWARE,
+                                    PREFIX_AFFINITY])
+def test_single_replica_group_is_transparent_sim(sim_config, policy):
+    sim = sim_config.build("sim")
+    m_direct = sim.run(sim_config.trace(seed=3))
+    group = ReplicaGroup([sim_config.build("sim")], router=Router(policy))
+    m_group = group.run(sim_config.trace(seed=3))
+    assert _per_request(sim.finished) == _per_request(
+        group.replicas[0].finished)
+    assert m_direct == m_group
+
+
+@pytest.fixture(scope="module")
+def engine_config():
+    cfg_a = scaled_config(ARCHS["llama3-8b"], num_layers=4)
+    cfg_b = scaled_config(ARCHS["h2o-danube-3-4b"], num_layers=4)
+    return RuntimeConfig(tenants={
+        "A": TenantSpec(cfg_a,
+                        params=build_model(cfg_a).init(jax.random.PRNGKey(0)),
+                        max_batch=4, max_context=32,
+                        slo=SLOSpec(50.0, 4.0, LATENCY)),
+        "B": TenantSpec(cfg_b,
+                        params=build_model(cfg_b).init(jax.random.PRNGKey(1)),
+                        max_batch=4, max_context=32),
+    }, quantum_steps=4)
+
+
+def test_single_replica_group_is_transparent_engine_across_gap(
+        engine_config):
+    """Two arrivals inside one idle fast-forwarded gap must be admitted
+    in the same step via the group as directly — the engine's horizon()
+    accounts for the jump, so the second arrival is dispatched before
+    the tick that fast-forwards (regression: it used to report
+    step_idx+1 and admit one step late through the group)."""
+    def trace():
+        t = tiny_trace(["A"], n_per_model=2, prompt_len=8, max_new=3,
+                       vocab=256)
+        t[0].arrival, t[1].arrival = 500.5, 500.6
+        return t
+
+    eng = engine_config.build("engine", base_kv_pages=64, page_size=4)
+    eng.submit(trace())
+    eng.run(max_steps=5_000)
+    group = ReplicaGroup(
+        [engine_config.build("engine", base_kv_pages=64, page_size=4)])
+    group.run(trace())
+    assert _per_request(eng.finished) == _per_request(
+        group.replicas[0].finished)
+    assert all(r.t_first_token == 501.0 for r in eng.finished)
+
+
+def test_group_ticks_idle_but_draining_replicas():
+    """A replica that finished its work mid-drain must keep ticking
+    until the drain completes, or it holds drain state (and the
+    coordination budget, and the router's avoidance) forever."""
+    class DrainingReplica(FakeReplica):
+        def __init__(self, drain_ticks_left):
+            super().__init__(draining=drain_ticks_left > 0)
+            self.left = drain_ticks_left
+            self.ticked = 0
+
+        def draining(self):
+            return self.left > 0
+
+        def tick(self):
+            self.ticked += 1
+            self.left = max(self.left - 1, 0)
+            return 0.0
+
+    idle_draining = DrainingReplica(3)
+    busy = FakeReplica()
+    busy.busy = lambda: busy.submitted != []   # busy while holding work
+    group = ReplicaGroup([idle_draining, busy])
+    for _ in range(4):
+        group.tick()
+    assert idle_draining.ticked == 3           # exactly until drained
+    assert not idle_draining.draining()
+
+
+def test_single_replica_group_is_transparent_engine(engine_config):
+    def trace():
+        return tiny_trace(["A", "B"], n_per_model=3, prompt_len=10,
+                          max_new=6, vocab=256)
+
+    eng = engine_config.build("engine", base_kv_pages=64, page_size=4)
+    eng.submit(trace())
+    eng.run(max_steps=2_000)
+    group = ReplicaGroup(
+        [engine_config.build("engine", base_kv_pages=64, page_size=4)],
+        router=Router(LEAST_LOADED))
+    m_group = group.run(trace())
+    g0 = group.replicas[0]
+    assert _per_request(eng.finished) == _per_request(g0.finished)
+    assert {r.rid: tuple(r.generated) for r in eng.finished} == \
+        {r.rid: tuple(r.generated) for r in g0.finished}
+    assert eng.metrics() == m_group
+
+
+# ------------------------------------------------------ multi-replica runs
+def test_two_replica_group_conserves_requests_and_pools_metrics(sim_config):
+    trace = sim_config.trace(seed=3)
+    group = ReplicaGroup([sim_config.build("sim") for _ in range(2)],
+                         router=Router(SLACK_AWARE))
+    met = group.run(sim_config.trace(seed=3))
+    done = sum(len(rt.finished) for rt in group.replicas)
+    assert done == len(trace)                  # nothing lost in routing
+    assert met.unfinished == 0
+    assert met.total_tokens == sum(
+        rt.metrics().total_tokens for rt in group.replicas)
+    assert met.makespan == max(
+        rt.metrics().makespan for rt in group.replicas)
+    tiers = group.tier_metrics()
+    assert set(tiers) == {"latency", "best_effort"}
+    # every request went through the router exactly once
+    assert len(group.router.assignments) == len(trace)
+    assert set(group.router.assignments.values()) <= {0, 1}
+
+
+def test_replica_assignment_is_seed_stable(sim_config):
+    def assignments(policy):
+        g = ReplicaGroup([sim_config.build("sim") for _ in range(2)],
+                         router=Router(policy, seed=9))
+        g.run(sim_config.trace(seed=3))
+        return g.router.assignments
+
+    for policy in (LEAST_LOADED, SLACK_AWARE, PREFIX_AFFINITY):
+        a, b = assignments(policy), assignments(policy)
+        assert a == b, policy
+        assert len(set(a.values())) == 2       # both replicas used
+
+
+def test_replica_group_requires_replicas():
+    with pytest.raises(ValueError, match="at least one"):
+        ReplicaGroup([])
+
+
+def test_from_config_builds_coordinated_fleet(sim_config):
+    g = ReplicaGroup.from_config(sim_config, 2, backend="sim",
+                                 coordinate=True)
+    assert len(g.replicas) == 2
+    assert isinstance(g.remap_policy, CoordinatedRemapPolicy)
+    assert ReplicaGroup.from_config(sim_config, 1).remap_policy is None

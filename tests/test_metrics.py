@@ -120,6 +120,80 @@ def test_per_tier_empty_tier_yields_nan_row():
     assert np.isnan(empty.slo_attainment(_tier_specs()["batch"]))
 
 
+# ------------------------------------------------------- fleet-level merge
+def test_merge_recomputes_tails_from_pooled_samples():
+    """The fleet p99 must come from the POOLED per-request samples: one
+    straggler replica's stalls are ~1.5% of the pooled samples and must
+    surface in the merged tail, while an average of per-replica p99s
+    would dilute them 2x (that wrong value is asserted against)."""
+    fast = ServingMetrics.from_requests(
+        [_req(f"f{i}", "m", 0.0, [0.5 + 0.01 * j for j in range(34)])
+         for i in range(3)], makespan=10.0)
+    slow_times, t = [], 0.5
+    for j in range(33):
+        t += 1.0 if j in (10, 20) else 0.01
+        slow_times.append(t)
+    slow = ServingMetrics.from_requests(
+        [_req("s", "m", 0.0, [0.5] + slow_times)], makespan=12.0)
+    merged = ServingMetrics.merge([fast, slow])
+    pooled = [0.01] * 99 + [0.01] * 31 + [1.0] * 2
+    assert merged.p99_tbt == pytest.approx(percentile(pooled, 99))
+    assert merged.p99_tbt > 0.5                      # stalls surface
+    avg_of_tails = (fast.p99_tbt + slow.p99_tbt) / 2
+    assert merged.p99_tbt != pytest.approx(avg_of_tails)
+    assert merged.total_tokens == fast.total_tokens + slow.total_tokens
+    assert merged.makespan == 12.0                   # replicas concurrent
+    assert merged.throughput_tok_s == pytest.approx(
+        merged.total_tokens / 12.0)
+
+
+def test_merge_empty_tier_nan_rows_survive():
+    """Merging all-empty slices stays NaN (never degrades to zeros), and
+    an empty replica's row contributes nothing to a non-empty merge."""
+    empty = ServingMetrics.from_requests([], makespan=0.0)
+    merged_empty = ServingMetrics.merge([empty, empty])
+    assert np.isnan(merged_empty.p99_tbt) and np.isnan(merged_empty.p99_ttft)
+    assert np.isnan(merged_empty.mean_ttft)
+    assert merged_empty.total_tokens == 0
+    live = ServingMetrics.from_requests(
+        [_req("a", "m", 0.0, [0.5, 0.51, 0.52])], makespan=1.0)
+    merged = ServingMetrics.merge([empty, live])
+    assert merged.p99_tbt == pytest.approx(live.p99_tbt)
+    assert merged.p99_ttft == pytest.approx(live.p99_ttft)
+    assert merged.total_tokens == live.total_tokens
+
+
+def test_merge_sums_counters_and_stays_mergeable():
+    a = ServingMetrics.from_requests(
+        [_req("a", "m", 0.0, [0.5, 0.6])], makespan=2.0)
+    a.preemptions, a.unfinished, a.bubble_time = 2, 1, 0.5
+    a._decode_time = 2.0
+    b = ServingMetrics.from_requests(
+        [_req("b", "m", 0.0, [0.7, 0.8])], makespan=3.0)
+    b.preemptions, b.unfinished, b.bubble_time = 1, 2, 0.1
+    b._decode_time = 1.0
+    m = ServingMetrics.merge([a, b])
+    assert m.preemptions == 3 and m.unfinished == 3
+    assert m.bubble_time == pytest.approx(0.6)
+    assert m.bubble_fraction == pytest.approx(0.6 / 3.0)
+    # merge of merges pools identically (ReplicaGroup.tier_metrics
+    # re-merges already-merged slices)
+    mm = ServingMetrics.merge([m, ServingMetrics.from_requests([], 0.0)])
+    assert mm.p99_tbt == pytest.approx(m.p99_tbt)
+    assert mm.unfinished == 3
+
+
+def test_merge_slo_attainment_pools_requests():
+    from repro.serving.slo import SLOSpec
+    ok = ServingMetrics.from_requests(
+        [_req("ok", "m", 0.0, [0.5, 0.51])], makespan=1.0)
+    late = ServingMetrics.from_requests(
+        [_req("late", "m", 0.0, [5.0, 5.01])], makespan=6.0)
+    spec = SLOSpec(ttft_target=1.0, tbt_target=0.1)
+    assert ServingMetrics.merge([ok, late]).slo_attainment(spec) \
+        == pytest.approx(0.5)
+
+
 # --------------------------------------------------- live-context T_c feedback
 @pytest.fixture(scope="module")
 def engine():

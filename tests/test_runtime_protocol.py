@@ -1,0 +1,224 @@
+"""ServingRuntime protocol conformance — the one contract both runtimes
+must satisfy so the cluster layer (router/replica group/coordination)
+can sit above either. Parametrized over the functional engine and the
+event-driven simulator; also covers the declare-once TenantSpec /
+RuntimeConfig lowering and the unfinished-truncation accounting."""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, scaled_config
+from repro.models import build_model
+from repro.serving import (
+    LATENCY, RuntimeConfig, ServingRuntime, SLOSpec, TenantSpec, scale_slo,
+)
+from repro.serving.traces import DiurnalSpec, TraceSpec, tiny_trace
+
+
+@pytest.fixture(scope="module")
+def engine_specs():
+    cfg_a = scaled_config(ARCHS["llama3-8b"], num_layers=4)
+    cfg_b = scaled_config(ARCHS["h2o-danube-3-4b"], num_layers=4)
+    pa = build_model(cfg_a).init(jax.random.PRNGKey(0))
+    pb = build_model(cfg_b).init(jax.random.PRNGKey(1))
+    return {
+        "A": TenantSpec(cfg_a, params=pa, max_batch=4, max_context=32,
+                        slo=SLOSpec(50.0, 4.0, LATENCY)),
+        "B": TenantSpec(cfg_b, params=pb, max_batch=4, max_context=32),
+    }
+
+
+@pytest.fixture(scope="module")
+def sim_config():
+    return RuntimeConfig(
+        tenants={
+            "A": TenantSpec(ARCHS["granite-3-8b"], mem_fraction=0.3,
+                            max_batch=8, slo=SLOSpec(1.0, 0.05, LATENCY),
+                            trace=DiurnalSpec("A", "sharegpt", 6.0,
+                                              duration=6.0, period=4.0)),
+            "B": TenantSpec(ARCHS["llama3-8b"], mem_fraction=0.5,
+                            max_batch=16,
+                            trace=TraceSpec("B", "alpaca", 4.0,
+                                            duration=6.0)),
+        },
+        mode="mirage", scheduler="slo", quantum_steps=4, slack_margin=0.05)
+
+
+def _engine_config(engine_specs):
+    return RuntimeConfig(tenants=dict(engine_specs), quantum_steps=4)
+
+
+def _build(backend, engine_specs, sim_config):
+    if backend == "engine":
+        rt = _engine_config(engine_specs).build(
+            "engine", base_kv_pages=64, page_size=4)
+        trace = tiny_trace(["A", "B"], n_per_model=2, prompt_len=8,
+                           max_new=4, vocab=256)
+    else:
+        rt = sim_config.build("sim")
+        trace = sim_config.trace(seed=5)
+    return rt, trace
+
+
+@pytest.mark.parametrize("backend", ["engine", "sim"])
+def test_protocol_conformance(backend, engine_specs, sim_config):
+    """Both runtimes satisfy the structural protocol AND its behavioral
+    contract: tick returns elapsed clock, busy drains to False, pressure
+    and slack are live, metrics/tier_metrics aggregate the run."""
+    rt, trace = _build(backend, engine_specs, sim_config)
+    assert isinstance(rt, ServingRuntime)
+    assert not rt.busy() and rt.inflight() == 0
+    rt.submit(trace)
+    assert rt.busy() and rt.inflight() == len(trace)
+    elapsed, ticks = 0.0, 0
+    while rt.busy():
+        assert ticks < 50_000
+        dt = rt.tick()
+        assert isinstance(dt, float) and dt >= 0.0
+        assert 0.0 <= rt.pressure() <= 1.0
+        assert isinstance(rt.draining(), bool)
+        elapsed += dt
+        ticks += 1
+    assert elapsed > 0.0
+    m = rt.metrics()
+    assert m.total_tokens > 0 and m.unfinished == 0
+    slacks = rt.tenant_slacks()
+    assert set(slacks) == {"A", "B"}
+    assert slacks["B"] == math.inf          # best-effort: inf slack
+    tiers = rt.tier_metrics()
+    assert set(tiers) == {"latency", "best_effort"}
+    assert tiers["latency"].total_tokens \
+        + tiers["best_effort"].total_tokens == m.total_tokens
+
+
+@pytest.mark.parametrize("backend", ["engine", "sim"])
+def test_manual_ticks_equal_run(backend, engine_specs, sim_config):
+    """run() is nothing but the tick loop: driving the protocol by hand
+    reproduces the exact same per-request timelines."""
+    ref, trace_a = _build(backend, engine_specs, sim_config)
+    ref.submit(trace_a)
+    if backend == "engine":
+        ref.run(max_steps=2_000)
+    else:
+        ref.run()
+    manual, trace_b = _build(backend, engine_specs, sim_config)
+    manual.submit(trace_b)
+    while manual.busy():
+        manual.tick()
+    a = {r.rid: (r.ttft(), tuple(r.token_times)) for r in ref.finished}
+    b = {r.rid: (r.ttft(), tuple(r.token_times)) for r in manual.finished}
+    assert a == b
+    assert ref.metrics() == manual.metrics()
+
+
+def test_set_reversion_enabled_gates_controller(sim_config):
+    sim = sim_config.build("sim")
+    assert sim.controller.cfg.dynamic_reversion
+    sim.set_reversion_enabled(False)
+    assert not sim.controller.cfg.dynamic_reversion
+    sim.set_reversion_enabled(True)
+    assert sim.controller.cfg.dynamic_reversion
+
+
+def test_reversion_gate_cannot_override_disabled_runtime(sim_config):
+    """A runtime built with dynamic_reversion=False stays off even when
+    a cluster policy grants it — the gate only restricts, so baseline
+    sweeps comparing 'reversion off' arms stay honest."""
+    sim = sim_config.build("sim", dynamic_reversion=False)
+    sim.set_reversion_enabled(True)
+    assert not sim.controller.cfg.dynamic_reversion
+
+
+def test_engine_idle_fast_forward_skips_unobservable_steps(engine_specs):
+    """An arrival gap costs O(1) ticks, not one tick per empty step, and
+    admission lands on the same step index (ceil(arrival)) the
+    one-by-one walk reaches — required so a lagging cluster replica's
+    clock heals in one tick instead of gating fleet dispatch."""
+    eng = _engine_config(engine_specs).build(
+        "engine", base_kv_pages=64, page_size=4)
+    trace = tiny_trace(["A"], n_per_model=1, prompt_len=8, max_new=3,
+                       vocab=256)
+    trace[0].arrival = 500.5
+    eng.submit(trace)
+    ticks, elapsed = 0, 0.0
+    while eng.busy():
+        elapsed += eng.tick()
+        ticks += 1
+        assert ticks < 50
+    assert eng.finished[0].t_first_token == 501.0   # ceil(500.5)
+    assert eng.finished[0].ttft() == pytest.approx(0.5)
+    # tick() reports the REAL elapsed steps, fast-forward included
+    assert elapsed == float(eng.step_idx)
+
+
+# ------------------------------------------------ declare-once lowering
+def test_tenant_spec_lowers_to_both_backends(engine_specs):
+    spec = TenantSpec(ARCHS["llama3-8b"], slo=SLOSpec(2.0, 0.1, LATENCY),
+                      max_batch=3, priority=2, max_context=48, paged=False,
+                      params=engine_specs["A"].params, mem_fraction=0.4)
+    sc = spec.to_sim()
+    assert sc.max_batch == 3 and sc.mem_fraction == 0.4
+    assert sc.slo == SLOSpec(2.0, 0.1, LATENCY)      # seconds pass through
+    ec = spec.to_engine(steps_per_second=10.0)
+    assert ec.max_batch == 3 and ec.max_context == 48 and ec.priority == 2
+    assert ec.slo == SLOSpec(20.0, 1.0, LATENCY)     # seconds -> steps
+    assert ec.params is spec.params
+
+
+def test_scale_slo_keeps_inf_and_tier():
+    s = scale_slo(SLOSpec(), 10.0)
+    assert s.ttft_target == math.inf and s.tbt_target == math.inf
+    assert scale_slo(SLOSpec(1.0, 0.5, LATENCY), 1.0) \
+        == SLOSpec(1.0, 0.5, LATENCY)
+
+
+def test_engine_lowering_requires_params():
+    with pytest.raises(ValueError, match="params"):
+        TenantSpec(ARCHS["llama3-8b"]).to_engine()
+
+
+def test_runtime_config_trace_binding(sim_config):
+    """Trace specs declared on the tenant are rebound to the tenant's
+    name and merged arrival-sorted; regeneration is seed-stable."""
+    t1 = sim_config.trace(seed=5)
+    t2 = sim_config.trace(seed=5)
+    assert {r.model for r in t1} == {"A", "B"}
+    assert [r.arrival for r in t1] == sorted(r.arrival for r in t1)
+    assert [(r.rid, r.arrival) for r in t1] == \
+        [(r.rid, r.arrival) for r in t2]
+    assert all(np.array_equal(a.prompt, b.prompt)
+               for a, b in zip(t1, t2))
+
+
+def test_runtime_config_rejects_unknown_trace_spec():
+    cfg = RuntimeConfig(tenants={
+        "A": TenantSpec(ARCHS["llama3-8b"], trace=object())})
+    with pytest.raises(TypeError, match="trace spec"):
+        cfg.trace()
+
+
+# ------------------------------------------- unfinished-truncation fix
+def test_engine_run_truncation_flags_unfinished(engine_specs):
+    eng = _engine_config(engine_specs).build(
+        "engine", base_kv_pages=64, page_size=4)
+    eng.submit(tiny_trace(["A", "B"], n_per_model=3, prompt_len=8,
+                          max_new=12, vocab=256))
+    with pytest.warns(RuntimeWarning, match="unfinished"):
+        finished = eng.run(max_steps=3)
+    m = eng.metrics()
+    assert m.unfinished > 0
+    assert len(finished) + m.unfinished == 6   # nothing silently vanishes
+    # draining the remaining budget clears the flag
+    eng.run(max_steps=2_000)
+    assert eng.metrics().unfinished == 0
+    assert len(eng.finished) == 6
+
+
+def test_sim_run_truncation_flags_unfinished(sim_config):
+    sim = sim_config.build("sim")
+    with pytest.warns(RuntimeWarning, match="unfinished"):
+        m = sim.run(sim_config.trace(seed=5), max_time=0.5)
+    assert m.unfinished > 0
+    assert len(sim.finished) + m.unfinished == len(sim_config.trace(seed=5))
