@@ -95,25 +95,32 @@ class ModelConfig:
             kinds.append(base)
         return tuple(kinds)
 
+    def _layer_params(self, kind: str, active: bool = False) -> int:
+        """Params of one decoder layer of the given kind (norms + mixer +
+        FFN/MoE). ``active=True`` counts only the params touched per token
+        (MoE: router + top_k experts instead of all num_experts)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        n_q, n_kv = self.num_heads, self.num_kv_heads
+        attn = d * (n_q * hd) + 2 * d * (n_kv * hd) + (n_q * hd) * d
+        total = 2 * d  # norms
+        total += attn if kind.startswith("attn") else self._ssm_params()
+        if kind.endswith("_moe"):
+            m = self.moe
+            n_e = m.top_k if active else m.num_experts
+            total += d * m.num_experts + n_e * 3 * d * m.d_expert
+        elif self.d_ff:
+            total += 3 * d * self.d_ff  # SwiGLU
+        return total
+
     def param_count(self) -> int:
         """Analytic parameter count (embedding + decoder stack [+ encoder])."""
         d, hd = self.d_model, self.resolved_head_dim
         n_q, n_kv = self.num_heads, self.num_kv_heads
         embed = self.vocab_size * d * (1 if self.tie_embeddings else 2)
         attn = d * (n_q * hd) + 2 * d * (n_kv * hd) + (n_q * hd) * d
-        ffn = 3 * d * self.d_ff  # SwiGLU
         total = embed
         for kind in self.layer_kinds():
-            total += 2 * d  # norms
-            if kind.startswith("attn"):
-                total += attn
-            else:
-                total += self._ssm_params()
-            if kind.endswith("_moe"):
-                m = self.moe
-                total += d * m.num_experts + m.num_experts * 3 * d * m.d_expert
-            elif self.d_ff:
-                total += ffn
+            total += self._layer_params(kind)
         if self.is_encoder_decoder:
             # encoder self-attn + FFN + cross-attn params in decoder
             enc = self.num_encoder_layers * (attn + 2 * d * self.d_ff + 2 * d)
@@ -145,6 +152,47 @@ class ModelConfig:
         expert_params = n_moe_layers * m.num_experts * 3 * self.d_model * m.d_expert
         active_expert = n_moe_layers * m.top_k * 3 * self.d_model * m.d_expert
         return total - expert_params + active_expert
+
+    @property
+    def dtype_bytes(self) -> int:
+        return {"float32": 4, "float64": 8}.get(self.dtype, 2)
+
+    def bytes_for_layer(self, i: int, dtype_bytes: Optional[int] = None) -> int:
+        """Parameter bytes of decoder layer ``i`` — the layer-granular remap
+        unit. For MoE layers this includes ALL experts; expert-granular
+        plans charge ``expert_bytes()`` per donated expert instead."""
+        b = self.dtype_bytes if dtype_bytes is None else dtype_bytes
+        return self._layer_params(self.layer_kinds()[i]) * b
+
+    def expert_bytes(self, dtype_bytes: Optional[int] = None) -> int:
+        """Bytes of ONE expert's FFN weights (``3 * d_model * d_expert``
+        SwiGLU params) — the expert-granular remap unit. 0 for non-MoE."""
+        if self.moe is None:
+            return 0
+        b = self.dtype_bytes if dtype_bytes is None else dtype_bytes
+        return 3 * self.d_model * self.moe.d_expert * b
+
+    def num_moe_layers(self) -> int:
+        return sum(1 for k in self.layer_kinds() if k.endswith("_moe"))
+
+    def active_params_per_token(self) -> int:
+        """Per-layer decomposition of ``active_param_count`` — embedding plus
+        each layer's per-token-active params. Equal to ``active_param_count``
+        by construction; exists so PerfModel and expert plans can charge
+        ``top_k`` experts per MoE layer rather than whole-layer totals."""
+        d = self.d_model
+        embed = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        total = embed
+        for kind in self.layer_kinds():
+            total += self._layer_params(kind, active=True)
+        if self.is_encoder_decoder:
+            hd = self.resolved_head_dim
+            attn = (d * (self.num_heads * hd) + 2 * d * (self.num_kv_heads * hd)
+                    + (self.num_heads * hd) * d)
+            enc = self.num_encoder_layers * (attn + 2 * d * self.d_ff + 2 * d)
+            cross = self.num_layers * (attn + d)
+            total += enc + cross
+        return total
 
 
 @dataclass(frozen=True)

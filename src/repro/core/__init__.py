@@ -20,3 +20,8 @@ from repro.core.transfer_pipeline import (
     make_plan_pipeline, max_alpha_pipeline, plan_bubble,
     simulate_decode_step, sync_step_time, uniform_plan,
 )
+from repro.core.expert_remap import (
+    ExpertPlan, ExpertRemapState, ExpertRoutingStats, expert_plan_from_units,
+    identity_expert_plan, merge_experts, residency_states, split_experts,
+    step_fetch_plan,
+)

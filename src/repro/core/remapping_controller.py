@@ -30,6 +30,7 @@ from typing import Dict, List, Optional
 
 from repro.core import layer_selection as ls
 from repro.core import transfer_pipeline as tpl
+from repro.core.expert_remap import ExpertPlan, ExpertRemapState
 from repro.core.metadata_store import MetadataStore, ModelInfo
 from repro.core.remap_policy import next_revert, next_victim
 
@@ -40,6 +41,9 @@ class RemapDecision:
     new_alpha: int              # target remap level (units)
     plan: ls.RemapPlan          # uniform-interval schedule for new_alpha
     reverted: bool = False      # True when this is a Dynamic Reversion step
+    # expert-granular models: the residency plan behind ``plan`` (which is
+    # then its flattened unit-space projection); None for layer-granular
+    expert_plan: Optional[ExpertPlan] = None
 
 
 @dataclasses.dataclass
@@ -60,12 +64,20 @@ class ControllerConfig:
 
 class RemappingController:
     def __init__(self, store: MetadataStore, cfg: ControllerConfig,
-                 t_transfer: Dict[str, float]):
+                 t_transfer: Dict[str, float],
+                 expert_state: Optional[Dict[str, ExpertRemapState]] = None):
         """``t_transfer``: per-model per-unit host->device transfer time,
-        profiled offline (§5.3: sizes and link bandwidth known a priori)."""
+        profiled offline (§5.3: sizes and link bandwidth known a priori).
+        ``expert_state``: models remapped at EXPERT granularity — their
+        Metadata Store unit is one expert (num_layers = L*E MoE units,
+        layer_bytes = expert_bytes) and the manager supplies victim
+        ordering (coldest routed experts, pins excluded) and the
+        expected-cold-fetch feasibility bound in place of the layer
+        pipeline bound."""
         self.store = store
         self.cfg = cfg
         self.t_transfer = t_transfer
+        self.expert_state = expert_state or {}
         self._calm_steps = 0
         self.decisions_log: List[RemapDecision] = []
 
@@ -108,6 +120,17 @@ class RemappingController:
         for m in self.store.models.values():
             t_c = t_compute.get(m.name, 0.0)
             t_t = self.t_transfer.get(m.name, float("inf"))
+            es = self.expert_state.get(m.name)
+            if es is not None:
+                # expert granularity: a donated expert only costs a fetch
+                # on the steps it is routed to, so the bound is expected
+                # cold-fetch time under the smoothed routing stats — far
+                # looser than the every-token layer pipeline bound
+                if m.active and self.cfg.pipeline_cap:
+                    caps[m.name] = min(m.max_alpha_cap, es.feasible_alpha(t_t))
+                else:
+                    caps[m.name] = min(m.max_alpha_cap, es.max_alpha())
+                continue
             if m.active:
                 if not self.cfg.pipeline_cap:
                     caps[m.name] = m.max_alpha_cap
@@ -124,49 +147,64 @@ class RemappingController:
                 caps[m.name] = m.max_alpha_cap
         return caps
 
+    def _stride(self, name: str) -> int:
+        """Units moved per decision: 1 layer, or a batch of experts (one
+        expert is too small a step to relieve pressure in useful time)."""
+        es = self.expert_state.get(name)
+        return es.units_per_decision if es is not None else 1
+
     def _remap_one(self, t_compute) -> Optional[RemapDecision]:
         caps = self._alpha_caps(t_compute)
         victim = next_victim(self.store, self.cfg.victim_policy, caps,
                              self.cfg.use_priority)
         if victim is None:
             return None
-        new_alpha = victim.remapped_alpha + 1
-        plan = self._plan(victim, new_alpha, t_compute)
+        cap = min(victim.max_alpha_cap, caps.get(victim.name, victim.max_alpha_cap))
+        new_alpha = min(victim.remapped_alpha + self._stride(victim.name), cap)
+        plan, ep = self._plan(victim, new_alpha, t_compute)
         if plan is None:
             return None
         self.store.apply_remap(victim.name, new_alpha)
-        return RemapDecision(victim.name, new_alpha, plan)
+        return RemapDecision(victim.name, new_alpha, plan, expert_plan=ep)
 
     def _revert_one(self, t_compute) -> Optional[RemapDecision]:
         m = next_revert(self.store, self.cfg.victim_policy,
                         self.cfg.use_priority)
         if m is None:
             return None
-        new_alpha = m.remapped_alpha - 1
-        plan = self._plan(m, new_alpha, t_compute)
+        new_alpha = max(m.remapped_alpha - self._stride(m.name), 0)
+        plan, ep = self._plan(m, new_alpha, t_compute)
         if plan is None:
             return None
         self.store.apply_remap(m.name, new_alpha)
         self._calm_steps = 0
-        return RemapDecision(m.name, new_alpha, plan, reverted=True)
+        return RemapDecision(m.name, new_alpha, plan, reverted=True,
+                             expert_plan=ep)
 
-    def _plan(self, m: ModelInfo, alpha: int, t_compute) -> Optional[ls.RemapPlan]:
+    def _plan(self, m: ModelInfo, alpha: int, t_compute):
+        """(flattened RemapPlan, ExpertPlan | None) for ``alpha`` units."""
+        es = self.expert_state.get(m.name)
+        if es is not None:
+            ep = es.plan_for_alpha(alpha)
+            if ep is None:
+                return None, None
+            return ep.to_remap_plan(), ep
         if alpha == 0:
-            return tpl.identity_plan(m.num_layers)
+            return tpl.identity_plan(m.num_layers), None
         t_c = t_compute.get(m.name, 0.0)
         t_t = self.t_transfer.get(m.name, float("inf"))
         if m.active:
             try:
                 return tpl.make_plan_pipeline(m.num_layers, alpha, t_c, t_t,
                                               self.cfg.double_buffer,
-                                              self.cfg.buffer_mode)
+                                              self.cfg.buffer_mode), None
             except ValueError:
                 if self.cfg.pipeline_cap:
-                    return None
+                    return None, None
                 # aggressive mode: schedule anyway; the pipeline stalls
         beta = 1 if self.cfg.buffer_mode == "single" or not self.cfg.double_buffer else 2
         m_layers = alpha + beta
         m_layers = min(m_layers, m.num_layers)
         cyc = tuple(ls.uniform_interval_layers(m.num_layers, m_layers))
         res = tuple(i for i in range(m.num_layers) if i not in set(cyc))
-        return ls.RemapPlan(m.num_layers, alpha, m_layers, cyc, res)
+        return ls.RemapPlan(m.num_layers, alpha, m_layers, cyc, res), None

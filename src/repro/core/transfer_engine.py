@@ -39,6 +39,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.expert_remap import (
+    EXPERT_PARAM_KEYS, ExpertPlan, identity_expert_plan, residency_states,
+    step_fetch_plan, unit_expert,
+)
 from repro.core.layer_selection import RemapPlan
 from repro.core.transfer_pipeline import (
     PlanDrain, StepTiming, identity_plan, simulate_decode_step,
@@ -167,6 +171,14 @@ class TransferEngine:
         self.stats = TransferStats()
         self._target_alpha: Dict[str, int] = {}
         self._cold: Dict[str, bool] = {}   # plan switched since last decode
+        # expert-granular state (MoE tenants; unit = one expert's weights)
+        self.expert_host: Dict[str, Any] = {}
+        self.expert_unit_bytes: Dict[str, int] = {}
+        self.expert_dims: Dict[str, Tuple[int, int]] = {}
+        self.expert_plans: Dict[str, ExpertPlan] = {}
+        self.expert_pending: Dict[str, PlanDrain] = {}
+        self._expert_flat: Dict[str, RemapPlan] = {}
+        self._expert_cold: Dict[str, bool] = {}
 
     def register(self, name: str, blocks, layer_bytes: int) -> None:
         self.host_copy[name] = blocks
@@ -257,6 +269,127 @@ class TransferEngine:
     def params_with_blocks(self, params, name: str):
         """Return params with blocks rebuilt dense (for non-remapped paths)."""
         return dict(params, blocks=self.host_copy[name])
+
+    # ------------------------------------------------------------------
+    # expert-granular remapping (MoE tenants)
+    # ------------------------------------------------------------------
+    # The same PlanDrain state machine and byte counters, at the unit
+    # ``unit = moe_layer * num_experts + expert`` (one expert's 3*d*d_expert
+    # SwiGLU weights). Residency plans have m == alpha (a donated expert
+    # only streams on the steps it is routed to); the β double-buffered
+    # slots enter per decode step via ``step_fetch_plan``.
+
+    def register_experts(self, name: str, moe_blocks, expert_bytes: int,
+                         num_moe_layers: int, num_experts: int) -> None:
+        """Register a model's expert-stacked MoE params: tree whose
+        EXPERT_PARAM_KEYS leaves have shape [num_moe_layers, num_experts,
+        ...] (the ``p["ffn"]`` sub-tree of the stacked blocks)."""
+        self.expert_host[name] = moe_blocks
+        self.expert_unit_bytes[name] = int(expert_bytes)
+        self.expert_dims[name] = (num_moe_layers, num_experts)
+        plan = identity_expert_plan(num_moe_layers, num_experts)
+        self.expert_plans[name] = plan
+        self._expert_flat[name] = plan.to_remap_plan()
+        self._expert_cold[name] = True
+
+    def submit_expert_plan(self, name: str, plan: ExpertPlan) -> None:
+        """Begin an async expert-residency switch. Donations (resident ->
+        remapped) are free drops; restores queue behind
+        ``advance_experts``. Re-submitting mid-drain retargets from the
+        interim plan, exactly like ``submit_plan``."""
+        L, E = self.expert_dims[name]
+        if (plan.num_moe_layers, plan.num_experts) != (L, E):
+            raise ValueError("plan shape mismatch")
+        flat = plan.to_remap_plan()
+        cur = self.expert_pending[name].current_plan \
+            if name in self.expert_pending else self._expert_flat[name]
+        eb = self.expert_unit_bytes[name]
+        old_alpha = cur.alpha if name not in self.expert_pending \
+            else self.expert_pending[name].target.alpha
+        if flat.alpha > old_alpha:
+            self.stats.remap_drops_bytes += (flat.alpha - old_alpha) * eb
+        elif flat.alpha < old_alpha:
+            self.stats.revert_bytes += (old_alpha - flat.alpha) * eb
+        self.stats.tier_switches += 1
+        drain = PlanDrain(cur, flat, eb)
+        if drain.done:
+            self.expert_pending.pop(name, None)
+        else:
+            self.expert_pending[name] = drain
+        if drain.current_plan != self._expert_flat[name]:
+            self._expert_flat[name] = drain.current_plan
+            self._expert_cold[name] = True
+        self.expert_plans[name] = plan
+
+    def advance_experts(self, name: str, budget_bytes) -> int:
+        """Drain up to ``budget_bytes`` of the pending expert restores."""
+        drain = self.expert_pending.get(name)
+        if drain is None:
+            return 0
+        used, _ = drain.advance(budget_bytes)
+        self.stats.drain_bytes += used
+        if drain.done:
+            del self.expert_pending[name]
+            self._expert_flat[name] = drain.target
+            self._expert_cold[name] = True
+        return used
+
+    def expert_residency(self, name: str) -> Dict[str, set]:
+        """Partition of flattened expert units into exactly one of
+        {resident, remapped, in_flight} under the live interim plan."""
+        states = residency_states(self._expert_flat[name],
+                                  self.expert_pending.get(name))
+        out = {"resident": set(), "remapped": set(), "in_flight": set()}
+        for u, s in states.items():
+            out[s].add(u)
+        return out
+
+    def expert_params_for(self, name: str, absent: str = "host"):
+        """Effective MoE params under the live residency. ``absent='host'``
+        returns values identical to the dense tree (cold experts stream
+        from the host copy — production semantics, bit-exact).
+        ``absent='zero'`` zeroes every non-resident expert instead: any
+        routed-to cold expert then perturbs the output, so bit-identity
+        against the dense run *proves* no routed expert was victimized."""
+        tree = self.expert_host[name]
+        if absent == "host":
+            return tree
+        L, E = self.expert_dims[name]
+        flat = self._expert_flat[name]
+        cold = [unit_expert(u, E) for u in flat.cycle_layers]
+
+        def zero(a):
+            out = np.array(a)
+            for l, e in cold:
+                out[l, e] = 0
+            return out
+
+        def walk(t):
+            if isinstance(t, dict):
+                return {k: (zero(v) if k in EXPERT_PARAM_KEYS else walk(v))
+                        for k, v in t.items()}
+            if isinstance(t, (tuple, list)):
+                out = [walk(v) for v in t]
+                return tuple(out) if isinstance(t, tuple) else out
+            return t
+        return walk(tree)
+
+    def note_moe_decode_step(self, name: str, t_compute_slot: float,
+                             t_fetch_expert: float, cold_counts,
+                             top_k: int, beta: int = 2) -> StepTiming:
+        """Account one decode step's cold-expert fetches: build the routed
+        -slot fetch schedule and resolve it through the shared event
+        pipeline — the same model ``PerfModel.expert_decode_timing``
+        charges, so engine and simulator agree by construction."""
+        L, _E = self.expert_dims[name]
+        plan = step_fetch_plan(L, top_k, cold_counts, beta=beta)
+        self.stats.stream_bytes += plan.m * self.expert_unit_bytes[name]
+        timing = simulate_decode_step(
+            plan, t_compute_slot, t_fetch_expert,
+            cold=self._expert_cold.pop(name, False))
+        self.stats.bubble_time_s += timing.bubble_time
+        self.stats.decode_time_s += timing.total
+        return timing
 
 
 def _repeats(blocks) -> int:

@@ -259,8 +259,14 @@ class MoE:
         c3 = int(math.ceil(lam + 3.0 * math.sqrt(max(lam, 1e-9))))
         return min(tokens_per_group, max(c, c3, m.min_capacity))
 
-    def __call__(self, p, x, cfg: ModelConfig):
-        """x [..., D] -> [..., D] (+ aux loss stored on .aux)."""
+    def __call__(self, p, x, cfg: ModelConfig, return_stats: bool = False):
+        """x [..., D] -> [..., D] (+ aux loss stored on .aux).
+
+        ``return_stats=True`` additionally returns the per-expert routing
+        assignment counts [num_experts] (pre-capacity, summed over all
+        top_k slots) — the raw signal ``ExpertRoutingStats`` smooths for
+        expert-granular remapping.
+        """
         m = cfg.moe
         orig_shape = x.shape
         d = orig_shape[-1]
@@ -337,6 +343,10 @@ class MoE:
         one_hot_top1 = jax.nn.one_hot(top_e[..., 0], m.num_experts)
         ce = one_hot_top1.reshape(-1, m.num_experts).mean(axis=0)
         aux = m.num_experts * jnp.sum(me * ce)
+        if return_stats:
+            counts = jnp.sum(
+                jax.nn.one_hot(top_e.reshape(-1), m.num_experts), axis=0)
+            return out.reshape(orig_shape), aux, counts
         return out.reshape(orig_shape), aux
 
 

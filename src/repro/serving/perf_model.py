@@ -12,6 +12,7 @@ import math
 from typing import Optional
 
 from repro.configs.base import ModelConfig
+from repro.core.expert_remap import step_fetch_plan
 from repro.core.layer_selection import RemapPlan
 from repro.core.transfer_pipeline import StepTiming, simulate_decode_step
 from repro.models.lm import block_pattern
@@ -156,9 +157,42 @@ class PerfModel:
         t_stream = streamed_bytes / self.hw.host_link_bw
         return max(t_compute, t_hbm, t_stream)
 
+    # --------------------------------------------------- expert granularity
+    @property
+    def expert_bytes(self) -> int:
+        """Bytes of one expert's FFN weights — the expert remap unit."""
+        return self.cfg.expert_bytes(self.dtype_bytes)
+
+    @property
+    def t_transfer_expert(self) -> float:
+        """Host->HBM time for one expert (the expert-granular T_T)."""
+        return self.expert_bytes / self.hw.host_link_bw
+
+    def expert_decode_timing(self, batch: int, avg_ctx: float, *,
+                             n_moe_layers: int, top_k: int, cold_counts,
+                             resident_fraction: float = 1.0,
+                             beta: int = 2, cold: bool = False) -> StepTiming:
+        """One decode iteration under expert-granular remapping, resolved
+        by the shared event pipeline over the routed-slot circle
+        (``n_moe_layers * top_k`` slots). ``cold_counts[l]`` is the number
+        of distinct remapped experts the batch routes to in MoE layer
+        ``l`` this step; each crosses the host link once, double-buffered
+        through ``beta`` slots. The per-slot compute budget is the
+        bandwidth-bound scalar time spread over the routed slots — the
+        expert analog of ``pipeline_inputs``, and the same derivation
+        ``TransferEngine.note_moe_decode_step`` charges, so engine and
+        simulator agree on bubbles by construction."""
+        plan = step_fetch_plan(n_moe_layers, top_k, cold_counts, beta=beta)
+        t_slot = self._decode_scalar(batch, avg_ctx, resident_fraction, 0) \
+            / max(plan.n, 1)
+        return simulate_decode_step(plan, t_slot, self.t_transfer_expert,
+                                    cold=cold)
+
     # -------------------------------------------------------------- cold start
-    def reload_time(self, alpha_units: int) -> float:
-        return alpha_units * self.unit_bytes / self.hw.host_link_bw
+    def reload_time(self, alpha_units: int,
+                    unit_bytes: Optional[int] = None) -> float:
+        ub = self.unit_bytes if unit_bytes is None else unit_bytes
+        return alpha_units * ub / self.hw.host_link_bw
 
     def swap_step_time(self, swapped_bytes: int) -> float:
         """Pie-style KV swap traffic for one iteration: bidirectional

@@ -34,8 +34,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import (
-    ControllerConfig, MemoryInfo, MetadataStore, ModelInfo, PlanDrain,
-    PrefixIndex, RemapPlan, RemappingController, identity_plan,
+    ControllerConfig, ExpertRemapState, MemoryInfo, MetadataStore, ModelInfo,
+    PlanDrain, PrefixIndex, RemapPlan, RemappingController, identity_plan,
 )
 from repro.serving.hw import HardwareSpec, GH200
 from repro.serving.perf_model import PerfModel, kv_bytes_per_token
@@ -132,6 +132,9 @@ class Simulator:
         watermark_tokens: int = DECODE_WATERMARK_TOKENS,
         slack_margin: float = 0.0,        # SLO urgency threshold (seconds)
         incremental_apply: bool = True,   # False = old synchronous apply
+        expert_granular: bool = False,    # MoE tenants: remap per expert
+        expert_routing=None,              # {model: traces.ZipfRouting}
+        expert_pin_fraction: float = 0.125,
     ):
         assert mode in ("mirage", "vllm", "swap")
         self.mode = mode
@@ -155,10 +158,31 @@ class Simulator:
             hbm_bytes=hw.hbm_bytes, page_bytes=page_bytes,
             base_kv_pages=sum(t.kv_capacity_base for t in self.tenants.values())
             // page_bytes))
+        # expert-granular remapping: MoE tenants register L*E expert units
+        # (layer_bytes = one expert's FFN weights) instead of pattern
+        # repeats; an ExpertRemapState per tenant supplies routing-driven
+        # victim selection and the expected-cold-fetch feasibility bound
+        self.expert_routing = dict(expert_routing or {})
+        self._expert: Dict[str, ExpertRemapState] = {}
+        if expert_granular and mode == "mirage":
+            for n, t in self.tenants.items():
+                cfg = t.cfg
+                if cfg.moe is None or cfg.num_moe_layers() == 0 \
+                        or t.perf.expert_bytes <= 0:
+                    continue
+                es = ExpertRemapState(
+                    cfg.num_moe_layers(), cfg.moe.num_experts,
+                    cfg.moe.top_k, t.perf.expert_bytes,
+                    pin_fraction=expert_pin_fraction)
+                es.note_step_compute(t.perf.decode_step_time(1, 512))
+                self._expert[n] = es
         for n, t in self.tenants.items():
+            es = self._expert.get(n)
             self.store.register(ModelInfo(
-                name=n, num_layers=t.perf.repeats,
-                layer_bytes=t.perf.unit_bytes,
+                name=n,
+                num_layers=(es.num_moe_layers * es.num_experts
+                            if es else t.perf.repeats),
+                layer_bytes=(es.expert_bytes if es else t.perf.unit_bytes),
                 max_remap_fraction=max_remap_fraction,
                 slo_tier=self.slo_specs[n].tier))
         self.controller = RemappingController(
@@ -168,7 +192,10 @@ class Simulator:
                 buffer_mode=buffer_mode, pipeline_cap=pipeline_cap,
                 dynamic_reversion=dynamic_reversion,
                 reversion_hysteresis=reversion_hysteresis),
-            {n: t.perf.t_transfer_unit for n, t in self.tenants.items()},
+            {n: (t.perf.t_transfer_expert if n in self._expert
+                 else t.perf.t_transfer_unit)
+             for n, t in self.tenants.items()},
+            expert_state=self._expert,
         )
         self.scheduler = make_scheduler(
             scheduler, list(self.tenants), quantum_steps=quantum_steps,
@@ -190,7 +217,8 @@ class Simulator:
         # tier-switch drains, and cold-start flags (first step after a
         # plan change has no prefetch from the previous iteration)
         self._live_plan: Dict[str, RemapPlan] = {
-            n: identity_plan(t.perf.repeats) for n, t in self.tenants.items()}
+            n: identity_plan(self.store.models[n].num_layers)
+            for n in self.tenants}
         self._drains: Dict[str, PlanDrain] = {}
         self._cold: Dict[str, bool] = {}
         self.bubble_time_s = 0.0       # accumulated fetch-miss stall
@@ -423,7 +451,8 @@ class Simulator:
                 r.prefix_matched_tokens += matched
             # cold-start reload of remapped layers overlaps prefill (§5.3)
             alpha = self.store.models[t.name].remapped_alpha
-            reload = t.perf.reload_time(alpha) if alpha else 0.0
+            reload = t.perf.reload_time(alpha, self._unit_bytes(t.name)) \
+                if alpha else 0.0
             if self.prefill_chunk_tokens > 0:
                 # chunked: admission reserves capacity only; the prompt is
                 # computed by _prefill_step in bounded chunks interleaved
@@ -480,6 +509,13 @@ class Simulator:
         return drain.current_plan if drain is not None \
             else self._live_plan[name]
 
+    def _unit_bytes(self, name: str) -> int:
+        """Bytes of one remap unit: an expert for expert-granular tenants,
+        a pattern repeat otherwise."""
+        t = self.tenants[name]
+        return t.perf.expert_bytes if name in self._expert \
+            else t.perf.unit_bytes
+
     def _prefill_remap_kw(self, t: SimTenant) -> Dict[str, float]:
         """Remap-aware prefill charging: only resident params read from
         HBM, cycling layers stream once over the host link. Gated on the
@@ -490,9 +526,16 @@ class Simulator:
         plan = self._current_plan(t.name)
         if not plan.m:
             return {}
+        ub = self._unit_bytes(t.name)
+        if t.name in self._expert:
+            # prefill routes through every expert, so all remapped experts
+            # stream once; the resident fraction is byte-accurate (only
+            # expert FFN bytes are remappable, not the whole stack)
+            rf = 1.0 - plan.alpha * ub / max(t.perf.param_bytes, 1)
+            return {"resident_fraction": rf, "streamed_bytes": plan.m * ub}
         return {
             "resident_fraction": 1.0 - plan.alpha / max(plan.n, 1),
-            "streamed_bytes": plan.m * t.perf.unit_bytes,
+            "streamed_bytes": plan.m * ub,
         }
 
     def _decode(self, t: SimTenant) -> float:
@@ -511,7 +554,9 @@ class Simulator:
         avg_ctx = sum(r.total_len for r in t.running) / batch
         info = self.store.models[t.name]
         plan = self._current_plan(t.name)
-        if self.mode == "mirage" and plan.m:
+        if self.mode == "mirage" and t.name in self._expert:
+            dt = self._decode_expert(t, batch, avg_ctx, plan)
+        elif self.mode == "mirage" and plan.m:
             # event-based per-layer prefetch pipeline: bubble only when a
             # fetch misses its layer slot; the first step after a plan
             # switch runs cold (no prefetch from the previous iteration)
@@ -542,6 +587,46 @@ class Simulator:
                 self.finished.append(r)
                 self._retire(t, r)
         return dt
+
+    def _decode_expert(self, t: SimTenant, batch: int, avg_ctx: float,
+                       plan: RemapPlan) -> float:
+        """One decode iteration for an expert-granular MoE tenant: feed the
+        trace's routing profile into the smoothed stats, derive per-layer
+        expected cold-expert fetches from the interim residency, and
+        resolve the step through the shared event pipeline (same charging
+        as ``TransferEngine.note_moe_decode_step``)."""
+        es = self._expert[t.name]
+        routing = self.expert_routing.get(t.name)
+        if routing is not None:
+            es.observe(routing.counts_at(self.now, batch))
+        E = es.num_experts
+        # per-layer remapped sets under the interim flattened plan
+        rem = [[] for _ in range(es.num_moe_layers)]
+        for u in plan.cycle_layers:
+            rem[u // E].append(u % E)
+        loads = es.stats.loads()
+        cold_counts = []
+        for l, r_ in enumerate(rem):
+            if not r_:
+                cold_counts.append(0)
+                continue
+            if routing is not None:
+                pe = routing.routed_probability(self.now, batch)[r_]
+            else:
+                pe = 1.0 - (1.0 - np.minimum(
+                    loads[l][r_] * es.top_k, 1.0)) ** max(batch, 1)
+            cold_counts.append(min(len(r_), int(round(float(np.sum(pe))))))
+        eb = max(t.perf.expert_bytes, 1)
+        rf = 1.0 - plan.alpha * eb / max(t.perf.param_bytes, 1)
+        timing = t.perf.expert_decode_timing(
+            batch, avg_ctx, n_moe_layers=es.num_moe_layers, top_k=es.top_k,
+            cold_counts=cold_counts, resident_fraction=rf,
+            cold=self._cold.pop(t.name, False))
+        self.bubble_time_s += timing.bubble_time
+        self.fetch_miss_events += len(timing.misses)
+        self.host_link_busy_s += sum(cold_counts) * eb / self.hw.host_link_bw
+        es.note_step_compute(timing.compute, batch)
+        return timing.total
 
     def _retire(self, t: SimTenant, r: Request) -> None:
         """Publish the finished prompt's blocks into the prefix cache (the
@@ -574,15 +659,17 @@ class Simulator:
         for d in decisions:
             t = self.tenants[d.model]
             target = d.plan
-            if not self.uniform_selection and target.m:
+            if not self.uniform_selection and target.m \
+                    and d.model not in self._expert:
                 # contiguous-selection ablation (§5.4): same m, worst
                 # layout — the event model produces the wrap-gap stall
+                # (layer plans only: expert victim sets are routing-driven)
                 cyc = tuple(range(target.m))
                 target = RemapPlan(
                     target.n, target.alpha, target.m, cyc,
                     tuple(range(target.m, target.n)))
             cur = self._current_plan(d.model)
-            drain = PlanDrain(cur, target, t.perf.unit_bytes)
+            drain = PlanDrain(cur, target, self._unit_bytes(d.model))
             if self.incremental_apply and not drain.done:
                 self._drains[d.model] = drain
             else:
@@ -605,8 +692,7 @@ class Simulator:
         dt = 0.0
         for name in list(self._drains):
             drain = self._drains[name]
-            used, _completed = drain.advance(
-                self.tenants[name].perf.unit_bytes)
+            used, _completed = drain.advance(self._unit_bytes(name))
             if used:
                 t_used = used / self.hw.host_link_bw
                 dt += t_used

@@ -252,6 +252,84 @@ def interference_trace(
     return reqs
 
 
+# ------------------------------------------------ expert-load skew (MoE)
+@dataclasses.dataclass
+class ZipfRouting:
+    """Synthetic MoE router popularity: expert loads follow a Zipf law
+    (rank r gets weight r^-s), with the hot set ROTATING every
+    ``rotation_period`` seconds (rank assignment rolls by
+    ``rotation_stride`` experts) — the adversarial regime for expert
+    pinning, since yesterday's hot expert is tomorrow's cold one.
+
+    Deterministic by construction (expected counts, no sampling): the
+    same trace replayed against engine and simulator feeds both the
+    identical routing signal, which the differential tests rely on."""
+    num_experts: int
+    top_k: int
+    zipf_s: float = 1.2
+    rotation_period: float = 0.0       # 0 = static hot set
+    rotation_stride: int = 1
+
+    def probs_at(self, t: float) -> np.ndarray:
+        """Per-expert routing probability at trace time ``t`` (sums to 1)."""
+        w = np.arange(1, self.num_experts + 1, dtype=float) ** -self.zipf_s
+        p = w / w.sum()
+        if self.rotation_period > 0:
+            shift = (int(t / self.rotation_period) * self.rotation_stride) \
+                % self.num_experts
+            p = np.roll(p, shift)
+        return p
+
+    def counts_at(self, t: float, tokens: int) -> np.ndarray:
+        """Expected per-expert assignment counts for ``tokens`` decode
+        tokens at time ``t`` (each token routes to ``top_k`` experts)."""
+        return self.probs_at(t) * tokens * self.top_k
+
+    def routed_probability(self, t: float, batch: int) -> np.ndarray:
+        """P(expert touched by at least one of ``batch`` tokens) — what
+        ``expected_cold_fetches`` integrates over the remapped set."""
+        p = np.minimum(self.probs_at(t) * self.top_k, 1.0)
+        return 1.0 - (1.0 - p) ** max(batch, 1)
+
+
+@dataclasses.dataclass
+class ExpertSkewSpec:
+    """One MoE tenant's workload for the expert-load-skew experiments:
+    standard bursty arrivals plus a ``ZipfRouting`` popularity profile
+    driving which experts its decode traffic exercises."""
+    model: str
+    dataset: str
+    rate: float                    # requests/s
+    num_experts: int
+    top_k: int
+    duration: float = 60.0
+    zipf_s: float = 1.2
+    rotation_period: float = 0.0
+    rotation_stride: int = 1
+    burstiness: float = 2.0
+    vocab: int = 32000
+
+
+def expert_skew_trace(specs: Sequence[ExpertSkewSpec], seed: int = 0):
+    """(requests, {model: ZipfRouting}) for MoE expert-remap experiments.
+
+    Same per-spec RNG stream contract as ``make_trace`` (stream tag
+    4<<16), so layer-granular vs expert-granular A/B runs see
+    bit-identical arrivals and lengths."""
+    reqs: List[Request] = []
+    routing: Dict[str, ZipfRouting] = {}
+    for si, spec in enumerate(specs):
+        rng = np.random.default_rng([seed, 4 << 16, si])
+        arr = bursty_arrivals(rng, spec.rate, spec.duration, spec.burstiness)
+        reqs.extend(_dataset_requests(rng, spec.model, spec.dataset, arr,
+                                      spec.vocab, f"{spec.model}-e{si}"))
+        routing[spec.model] = ZipfRouting(
+            spec.num_experts, spec.top_k, spec.zipf_s,
+            spec.rotation_period, spec.rotation_stride)
+    reqs.sort(key=lambda r: r.arrival)
+    return reqs, routing
+
+
 def tiny_trace(models: Sequence[str], n_per_model: int = 4,
                prompt_len: int = 8, max_new: int = 6, vocab: int = 256,
                spacing: float = 0.01, seed: int = 0) -> List[Request]:
