@@ -4,3 +4,4 @@ from repro.cluster.replica_group import ReplicaGroup
 from repro.cluster.router import (
     LEAST_LOADED, PREFIX_AFFINITY, POLICIES, SLACK_AWARE, Router,
 )
+from repro.cluster.shard_set import ShardSet

@@ -1,18 +1,24 @@
-"""Cross-replica remap coordination.
+"""Cross-unit remap coordination (single replicas and whole shard sets).
 
 A revert (Dynamic Reversion) drains restored layers over the host link
-for several iterations; every request running on that replica eats the
-drain time. With independent per-replica controllers and near-identical
-traffic, replicas revert nearly *simultaneously* — the whole fleet stalls
+for several iterations; every request running on that unit eats the
+drain time. With independent per-unit controllers and near-identical
+traffic, units revert nearly *simultaneously* — the whole fleet stalls
 at once and the router has nowhere clean to send latency-tier traffic.
 ``CoordinatedRemapPolicy`` staggers those transitions: at most
-``max_concurrent_drains`` replicas may start a new reversion at a time,
+``max_concurrent_drains`` units may start a new reversion at a time,
 so there is always a non-draining twin for the router's drain-awareness
 to shift traffic onto (the ROADMAP "revert on one replica while its twin
 absorbs traffic" scenario).
 
+The grant unit is whatever the group routes to — a single-device replica
+or a ``ShardSet``. A set is granted and drained ATOMICALLY: one
+``set_reversion_enabled`` gates all N shards, and the drain it admits is
+the set's lock-step ``ShardedPlanDrain`` — the policy can never leave a
+layer half-drained across a set because no per-shard grant exists.
+
 Only *reversion* is gated. Pressure-driven remaps stay always-on: they
-are how a replica makes room for admitted KV, and delaying them would
+are how a unit makes room for admitted KV, and delaying them would
 trade a latency stall for preemptions or admission livelock.
 """
 from __future__ import annotations
@@ -23,9 +29,9 @@ from typing import Sequence
 
 @dataclasses.dataclass
 class CoordinatedRemapPolicy:
-    """Grant reversion tokens across replicas with a STICKY rotation.
+    """Grant reversion tokens across serving units with a STICKY rotation.
 
-    Replicas already mid-drain keep their grant (an in-flight
+    Units already mid-drain keep their grant (an in-flight
     ``PlanDrain`` must complete — interrupting it would leave an interim
     plan live forever). Free grants go to the cursor replica and its
     successors; the cursor advances when its holder actually begins a

@@ -1,13 +1,16 @@
 """Replica fleet over the ``ServingRuntime`` protocol.
 
 ``ReplicaGroup`` is the cluster-level runtime: it holds N independent
-replicas (each a full ``ServingEngine`` or ``Simulator`` with its own
-allocator and ``RemappingController``), dispatches the global request
-stream through a ``Router`` as arrival times come due, optionally applies
-a ``CoordinatedRemapPolicy`` before every round, and advances all busy
-replicas in lock-step ``tick()`` rounds. Fleet metrics are
-``ServingMetrics.merge`` over the replicas — tails recomputed from pooled
-per-request samples, never averaged-of-tails.
+serving units — single-device replicas (each a full ``ServingEngine`` or
+``Simulator`` with its own allocator and ``RemappingController``) or
+multi-device ``ShardSet``s when the config declares shard degrees —
+dispatches the global request stream through a ``Router`` as arrival
+times come due, optionally applies a ``CoordinatedRemapPolicy`` before
+every round, and advances all busy units in lock-step ``tick()`` rounds.
+Drain-awareness is per UNIT: a draining shard set diverts traffic and
+consumes a coordination grant as one thing, never per device. Fleet
+metrics are ``ServingMetrics.merge`` over the units — tails recomputed
+from pooled per-request samples, never averaged-of-tails.
 
 Single-replica transparency (tested for both backends): driving a
 1-replica group over a trace is byte-identical to submitting the trace to
@@ -23,6 +26,7 @@ from typing import Dict, List, Optional, Sequence
 
 from repro.cluster.policy import CoordinatedRemapPolicy
 from repro.cluster.router import Router
+from repro.cluster.shard_set import ShardSet
 from repro.serving.request import Request, ServingMetrics
 from repro.serving.runtime import (
     RuntimeConfig, ServingRuntime, merge_arrivals,
@@ -51,11 +55,21 @@ class ReplicaGroup:
                     router: Optional[Router] = None,
                     coordinate: bool = False,
                     **kw) -> "ReplicaGroup":
-        """Build N identical replicas from one declare-once config.
-        ``coordinate=True`` installs a ``CoordinatedRemapPolicy`` (stagger
-        reverts); extras in ``kw`` pass through to the backend builder."""
-        replicas = [config.build(backend, **kw) for _ in range(n_replicas)]
-        return cls(replicas, router=router,
+        """Build N identical serving units from one declare-once config.
+        When the config declares shard degrees (``TenantSpec.shards > 1``)
+        each unit is a ``ShardSet`` spanning that many devices — routed,
+        ticked, and drain-tracked atomically; fit is validated up front
+        (``RuntimeConfig.validate_fit``) so an impossible tenant fails
+        here, not in an allocator mid-run. ``coordinate=True`` installs a
+        ``CoordinatedRemapPolicy`` (stagger whole-unit drains); extras in
+        ``kw`` pass through to the backend builder."""
+        if config.shard_devices() > 1:
+            units: List[ServingRuntime] = [
+                ShardSet.from_config(config, backend=backend, **kw)
+                for _ in range(n_replicas)]
+        else:
+            units = [config.build(backend, **kw) for _ in range(n_replicas)]
+        return cls(units, router=router,
                    remap_policy=CoordinatedRemapPolicy() if coordinate
                    else None)
 
@@ -121,6 +135,19 @@ class ReplicaGroup:
         return self.metrics()
 
     # --------------------------------------------------------------- metrics
+    @property
+    def partial_drain_ticks(self) -> int:
+        """Fleet total of ticks where any unit had a layer drained on some
+        of its shards but not others (zero for single-device units and for
+        lock-step shard sets)."""
+        total = 0
+        for rt in self.replicas:
+            if isinstance(rt, ShardSet):
+                total += rt.partial_drain_ticks
+            else:
+                total += getattr(rt, "shard_partial_drain_ticks", 0)
+        return total
+
     def metrics(self) -> ServingMetrics:
         return ServingMetrics.merge([rt.metrics() for rt in self.replicas])
 

@@ -80,9 +80,16 @@ class Router:
         if self.policy == SLACK_AWARE:
             return min(avail, key=lambda i: (
                 -self._finite_slack(replicas[i], req.model),
-                replicas[i].inflight(), replicas[i].pressure(), i))
+                self._load(replicas[i]), replicas[i].pressure(), i))
         return min(avail, key=lambda i: (
-            replicas[i].inflight(), replicas[i].pressure(), i))
+            self._load(replicas[i]), replicas[i].pressure(), i))
+
+    @staticmethod
+    def _load(rt) -> float:
+        # capacity-normalized: a shard set's N devices serve one queue, so
+        # its in-flight count is divided by its degree. Single-device
+        # units divide by 1 — the historical ordering, bit for bit.
+        return rt.inflight() / max(getattr(rt, "shards", 1), 1)
 
     @staticmethod
     def _finite_slack(rt, model: str) -> float:

@@ -8,7 +8,9 @@ from repro.core.remap_policy import victim_order, next_victim, next_revert
 from repro.core.remapping_controller import (
     RemappingController, ControllerConfig, RemapDecision,
 )
-from repro.core.kv_allocator import PagedKVAllocator, Segment
+from repro.core.kv_allocator import (
+    PagedKVAllocator, Segment, ShardedPagedKVAllocator,
+)
 from repro.core.prefix_index import (
     PrefixIndex, PrefixMatch, PrefixNode, PrefixStats,
 )
@@ -16,8 +18,8 @@ from repro.core.transfer_engine import (
     TransferEngine, TransferStats, split_blocks, merge_blocks, make_fetch,
 )
 from repro.core.transfer_pipeline import (
-    FetchMiss, PlanDrain, StepTiming, choose_m_pipeline, identity_plan,
-    make_plan_pipeline, max_alpha_pipeline, plan_bubble,
+    FetchMiss, PlanDrain, ShardedPlanDrain, StepTiming, choose_m_pipeline,
+    identity_plan, make_plan_pipeline, max_alpha_pipeline, plan_bubble,
     simulate_decode_step, sync_step_time, uniform_plan,
 )
 from repro.core.expert_remap import (

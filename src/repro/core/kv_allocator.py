@@ -224,3 +224,50 @@ class PagedKVAllocator:
         # CoW: shared prefix pages precede private pages and stay full
         for rid, shared in self.seq_shared.items():
             assert shared <= len(self.seq_pages.get(rid, []))
+
+
+class ShardedPagedKVAllocator(PagedKVAllocator):
+    """One LOGICAL page space shared by the ``shards`` devices of a
+    model-parallel set.
+
+    Under SERVING_RULES the KV heads are striped over the "model" axis, so
+    every shard holds the same token pages for its own head slice: page ids,
+    refcounts, segments and the free list are *logical* (one bookkeeping
+    instance, inherited unchanged), while each physical page is
+    ``1/shards``-th the logical page's bytes on every device. Allocation
+    and eviction therefore stay single-decision — a page is resident on ALL
+    shards or on none, the KV analogue of the lock-step drain invariant —
+    and ``shard_page_tables`` materializes the per-device tables, identical
+    along the shard axis by construction (asserted in tests).
+
+    ``shards=1`` is behaviorally identical to ``PagedKVAllocator``.
+    """
+
+    def __init__(self, base_pages: int, page_size: int, *, shards: int = 1,
+                 logical_page_bytes: int = 0):
+        super().__init__(base_pages, page_size)
+        self.shards = max(int(shards), 1)
+        self.logical_page_bytes = logical_page_bytes
+
+    @property
+    def shard_page_bytes(self) -> int:
+        """Physical bytes one device commits per logical page."""
+        return self.logical_page_bytes // self.shards
+
+    def shard_page_tables(self, rids: List[str], max_pages: int) -> np.ndarray:
+        """[shards, len(rids), max_pages] int32 — one table per device.
+        Rows are identical along axis 0: the cross-shard symmetry
+        invariant that makes a single routing/eviction decision valid for
+        the whole set."""
+        table = self.page_table(rids, max_pages)
+        return np.broadcast_to(table, (self.shards,) + table.shape).copy()
+
+    def check_invariants(self) -> None:
+        super().check_invariants()
+        if self.seq_pages:
+            rids = list(self.seq_pages)
+            mp = max(len(p) for p in self.seq_pages.values())
+            stacked = self.shard_page_tables(rids, mp)
+            for s in range(1, self.shards):
+                assert (stacked[s] == stacked[0]).all(), \
+                    "per-shard page tables diverged"

@@ -346,3 +346,103 @@ class PlanDrain:
             self._partial -= self.layer_bytes
             completed.append(self.to_load.pop(0))
         return used, completed
+
+
+class ShardedPlanDrain:
+    """``PlanDrain`` generalized to a layer striped across N model-parallel
+    shards: each shard owns a ``slice_bytes`` slice of every remap unit and
+    drains it over its *own* host link.
+
+    Two coordination regimes (the fig24 comparison):
+
+      * **lockstep** (the invariant this repo enforces in production): all
+        shards advance the same transition in the same tick — their drains
+        are one logical drain over the per-shard slice, the interim plan is
+        shared, and a layer is never resident on some shards but cycling on
+        others. One cold restart when the set flips to the target plan.
+      * **independent** (the naive baseline): each shard's controller
+        applies the decision on its own clock, modeled as per-shard drains
+        staggered ``skew`` ticks apart. The *set* can only serve the target
+        plan once the LAST shard finishes, so the effective plan stays the
+        interim for the whole stagger window; every shard that flips early
+        forces a set-wide pipeline cold restart, and every tick where some
+        shards are done while others are not is a **partially-drained
+        layer** — an invalid serving state the lock-step regime makes
+        unrepresentable.
+
+    API-compatible with ``PlanDrain`` (``done`` / ``remaining_bytes`` /
+    ``current_plan`` / ``target`` / ``advance``) so the simulator's drain
+    registry holds either interchangeably. ``advance`` additionally records
+    ``last_advance_completions`` (shards that finished this call) and the
+    ``partial`` property reports the invalid some-done-some-not state.
+    """
+
+    def __init__(self, current: RemapPlan, target: RemapPlan,
+                 slice_bytes: int, *, shards: int = 1,
+                 lockstep: bool = True, skew: int = 1):
+        self.shards = max(int(shards), 1)
+        self.lockstep = lockstep
+        self.target = target
+        if lockstep or self.shards == 1:
+            self._drains = [PlanDrain(current, target, slice_bytes)]
+            self._delays = [0]
+        else:
+            self._drains = [PlanDrain(current, target, slice_bytes)
+                            for _ in range(self.shards)]
+            self._delays = [i * max(int(skew), 0)
+                            for i in range(self.shards)]
+        self.layer_bytes = self._drains[0].layer_bytes
+        self.transition_bytes = self._drains[0].transition_bytes
+        self.last_advance_completions = 0
+
+    # ------------------------------------------------------------- inspect
+    @property
+    def done(self) -> bool:
+        return all(d.done for d in self._drains)
+
+    @property
+    def partial(self) -> bool:
+        """Some shards drained, some not — a layer partially resident
+        across its shard set (never true under lockstep)."""
+        done = sum(1 for d in self._drains if d.done)
+        return 0 < done < len(self._drains)
+
+    @property
+    def remaining_bytes(self) -> int:
+        return max(d.remaining_bytes for d in self._drains)
+
+    @property
+    def current_plan(self) -> RemapPlan:
+        """The plan the SET can serve: the shared interim until every
+        shard is done (all inner drains share one interim by
+        construction), the target after."""
+        for d in self._drains:
+            if not d.done:
+                return d.current_plan
+        return self.target
+
+    # ------------------------------------------------------------- advance
+    def advance(self, budget_bytes) -> Tuple[int, List[int]]:
+        """One tick of per-shard link budget. Each not-yet-started shard
+        burns a delay tick instead (the independent regime's stagger);
+        wall-clock cost is the max over shards since links run in
+        parallel. Returns (max bytes used on any shard, layers that
+        became resident on the LAST shard to hold them — i.e. resident
+        set-wide)."""
+        used_max = 0
+        flips = 0
+        completed_set: List[int] = []
+        for i, d in enumerate(self._drains):
+            if d.done:
+                continue
+            if self._delays[i] > 0:
+                self._delays[i] -= 1
+                continue
+            used, _completed = d.advance(budget_bytes)
+            used_max = max(used_max, used)
+            if d.done:
+                flips += 1
+                if all(o.done for o in self._drains):
+                    completed_set = list(_completed)
+        self.last_advance_completions = flips
+        return used_max, completed_set

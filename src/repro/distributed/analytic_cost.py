@@ -252,6 +252,55 @@ def decode_cost(cfg: ModelConfig, shape: ShapeConfig, data_shards: int,
     return StepCost({f"fwd_{k}": v for k, v in fwd.items()}, hbm, model_flops)
 
 
+def _collective_terms(cfg: ModelConfig, tokens: int, shards: int,
+                      dtype_bytes: int) -> Tuple[float, int]:
+    """Per-device wire bytes + collective count for one forward pass over
+    ``tokens`` on a ``shards``-way model-parallel set (SERVING_RULES layout:
+    heads/kv_heads/mlp/experts/vocab over "model", activations replicated).
+
+    Ring all-reduce moves 2(N-1)/N of the payload per device; all-gather and
+    all-to-all move (N-1)/N. Per block: one all-reduce after the mixer's
+    output projection, one after the FFN; MoE adds dispatch+combine
+    all-to-alls of the routed token copies. The vocab-sharded logits need a
+    final all-gather. The count feeds the per-collective latency floor
+    (``HardwareSpec.ici_latency_s``), which dominates at decode sizes.
+    """
+    if shards <= 1 or tokens <= 0:
+        return 0.0, 0
+    ring = 2.0 * (shards - 1) / shards
+    gather = (shards - 1) / shards
+    act = float(tokens) * cfg.d_model * dtype_bytes
+    wire, n = 0.0, 0
+    for ld in layer_defs(cfg):
+        wire += ring * act                       # mixer out-proj all-reduce
+        n += 1
+        if ld.ffn == "moe":
+            m = cfg.moe
+            wire += 2.0 * gather * tokens * m.top_k * cfg.d_model * dtype_bytes
+            wire += ring * act                   # combine all-reduce
+            n += 3                               # a2a x2 + all-reduce
+        elif ld.ffn == "dense":
+            wire += ring * act
+            n += 1
+    wire += gather * float(tokens) * cfg.vocab_size * dtype_bytes
+    n += 1                                       # logits all-gather
+    return wire, n
+
+
+def decode_collective_bytes(cfg: ModelConfig, batch: int, shards: int,
+                            dtype_bytes: int = 2) -> Tuple[float, int]:
+    """One decode step (one token per sequence): (per-device wire bytes,
+    collective count). Zero at ``shards == 1``."""
+    return _collective_terms(cfg, batch, shards, dtype_bytes)
+
+
+def prefill_collective_bytes(cfg: ModelConfig, tokens: int, shards: int,
+                             dtype_bytes: int = 2) -> Tuple[float, int]:
+    """One prefill pass over ``tokens``: (per-device wire bytes, collective
+    count). Zero at ``shards == 1``."""
+    return _collective_terms(cfg, tokens, shards, dtype_bytes)
+
+
 def cost_for(cfg: ModelConfig, shape: ShapeConfig, data_shards: int,
              **kw) -> StepCost:
     if shape.kind == "train":

@@ -2,11 +2,14 @@
 
 Every parameter / activation dimension carries a *logical* axis name; rules
 map logical names to (tuples of) mesh axes. ``spec_for`` resolves a logical
-annotation against a mesh, silently dropping mesh axes that do not divide the
+annotation against a mesh, dropping mesh axes that do not divide the
 dimension or that are already consumed by an earlier dimension of the same
 tensor (PartitionSpec forbids reuse). This is what makes e.g. GQA KV heads
 (8) on a model=16 axis degrade gracefully to replication, and global_batch=1
-long-context cells fall through to pure context parallelism.
+long-context cells fall through to pure context parallelism. A divisibility
+drop is *warned once* per (logical axis, mesh): graceful degradation is by
+design, but a shard set that silently serves a dimension unsharded is a
+misconfiguration the operator must get to see.
 
 Mesh axes:
   pod    - slowest (data-center interconnect): DP gradient sync, optional FSDP
@@ -16,7 +19,8 @@ Mesh axes:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Sequence, Tuple
+import warnings
+from typing import Dict, Optional, Sequence, Set, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -117,6 +121,30 @@ def _axis_size(mesh: Mesh, name: str) -> int:
     return mesh.shape[name] if name in mesh.axis_names else 1
 
 
+# (logical axis, mesh signature) pairs already warned about — the
+# divisibility fallback is by design, but each degradation surfaces once
+# so a misconfigured shard set can't silently serve unsharded
+_DROP_WARNED: Set[Tuple[str, Tuple[Tuple[str, int], ...]]] = set()
+
+
+def _warn_divisibility_drop(logical: str, dim: int, axis: str, size: int,
+                            mesh_sig: Tuple[Tuple[str, int], ...]) -> None:
+    key = (logical, mesh_sig)
+    if key in _DROP_WARNED:
+        return
+    _DROP_WARNED.add(key)
+    warnings.warn(
+        f"logical axis {logical!r} (dim {dim}) is not divisible by mesh "
+        f"axis {axis!r} (size {size}); falling back to replication for "
+        f"this dimension on mesh {dict(mesh_sig)}",
+        RuntimeWarning, stacklevel=3)
+
+
+def _mesh_signature(mesh) -> Tuple[Tuple[str, int], ...]:
+    return tuple(sorted((ax, _axis_size(mesh, ax))
+                        for ax in mesh.axis_names))
+
+
 def spec_for(
     logical_axes: Sequence[Optional[str]],
     shape: Sequence[int],
@@ -137,6 +165,8 @@ def spec_for(
             if size == 1:
                 continue
             if dim % (prod * size) != 0:
+                _warn_divisibility_drop(logical, dim, ax, size,
+                                        _mesh_signature(mesh))
                 continue
             chosen.append(ax)
             prod *= size
@@ -151,6 +181,56 @@ def spec_for(
     while out and out[-1] is None:
         out.pop()
     return P(*out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardDegrees:
+    """Per-logical-axis tensor-parallel degree a shard set actually achieves.
+
+    Lowered from the serving-profile rules: a dimension splits over the
+    set's ``model`` axis only when the rules map it there AND the degree
+    divides it; otherwise it degrades to replication (degree 1, warned
+    once through the same registry as ``spec_for``).
+    """
+    shards: int
+    heads: int = 1
+    kv_heads: int = 1
+    mlp: int = 1
+    vocab: int = 1
+    experts: int = 1
+
+
+def serving_shard_degrees(cfg, shards: int,
+                          rules: ShardingRules = SERVING_RULES) -> ShardDegrees:
+    """Lower a model config onto an N-way model-parallel shard set.
+
+    This is the serving analogue of ``spec_for``: instead of resolving a
+    PartitionSpec against a live mesh, it reports the achieved split degree
+    for each parameter dimension the serving rules place on ``model``, so
+    the analytic perf model can divide bytes/FLOPs per shard. Degree-1 is
+    the exact no-op lowering (every degree 1).
+    """
+    shards = max(int(shards), 1)
+    sig = (("model", shards),)
+
+    def degree(logical: str, dim: int) -> int:
+        if shards == 1 or dim <= 0:
+            return 1
+        if "model" not in rules.lookup(logical):
+            return 1
+        if dim % shards != 0:
+            _warn_divisibility_drop(logical, dim, "model", shards, sig)
+            return 1
+        return shards
+
+    return ShardDegrees(
+        shards=shards,
+        heads=degree("heads", cfg.num_heads),
+        kv_heads=degree("kv_heads", cfg.num_kv_heads),
+        mlp=degree("mlp", cfg.d_ff),
+        vocab=degree("vocab", cfg.vocab_size),
+        experts=degree("experts", cfg.moe.num_experts if cfg.moe else 0),
+    )
 
 
 def sharding_for(

@@ -39,6 +39,9 @@ class HardwareSpec:
     # paper §3.2: 1:1 read/write mix degrades host-link bandwidth ~15%
     bidir_degradation: float = 0.15
     mfu_ceiling: float = 0.6   # realistic fraction of peak for dense matmul
+    # per-collective launch/synchronization floor on the ICI/NVLink fabric;
+    # dominates ring all-reduce time for decode-sized payloads
+    ici_latency_s: float = 1e-6
 
     @property
     def host_link_bw_bidir(self) -> float:

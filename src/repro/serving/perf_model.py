@@ -2,8 +2,17 @@
 
 Used by (a) the Remapping Controller for its T_c / T_T feasibility inputs
 (paper §5.3 profiles these offline) and (b) the event-driven simulator for
-iteration timing. Single-accelerator model, matching the paper's single-GPU
-multi-tenant setup; the distributed dry-run path has its own roofline.
+iteration timing.
+
+``shards=1`` (the default) is the paper's single-accelerator multi-tenant
+setup and is bit-identical to the historical model. ``shards=N`` models ONE
+representative device of an N-way model-parallel shard set (SPMD): param /
+KV / remap-unit bytes divide by the effective degree lowered through
+``distributed/sharding.SERVING_RULES``, a collective term derived from
+``distributed/analytic_cost`` rides the ICI fabric, and — crucially for the
+remap math — ``t_transfer_unit`` becomes the *per-shard slice* over that
+shard's own host link, so the β-slot prefetch schedule runs against
+per-shard host bandwidth.
 """
 from __future__ import annotations
 
@@ -15,6 +24,8 @@ from repro.configs.base import ModelConfig
 from repro.core.expert_remap import step_fetch_plan
 from repro.core.layer_selection import RemapPlan
 from repro.core.transfer_pipeline import StepTiming, simulate_decode_step
+from repro.distributed.analytic_cost import decode_collective_bytes
+from repro.distributed.sharding import serving_shard_degrees
 from repro.models.lm import block_pattern
 from repro.serving.hw import HardwareSpec
 
@@ -48,18 +59,48 @@ class PerfModel:
     cfg: ModelConfig
     hw: HardwareSpec
     dtype_bytes: int = 2
+    shards: int = 1            # model-parallel degree; models ONE shard
 
     def __post_init__(self):
         self.pattern, self.repeats = block_pattern(self.cfg)
         self.param_bytes = self.cfg.param_count() * self.dtype_bytes
         self.active_param_bytes = self.cfg.active_param_count() * self.dtype_bytes
+        self.total_param_bytes = self.param_bytes
+        self.shard_kv_token_bytes = kv_bytes_per_token(self.cfg,
+                                                       self.dtype_bytes)
+        self.degrees = None
+        if self.shards > 1:
+            self.degrees = serving_shard_degrees(self.cfg, self.shards)
+            self.param_bytes //= self.shards
+            self.active_param_bytes //= self.shards
+            self.shard_kv_token_bytes //= self.degrees.kv_heads
+            # collective wire bytes scale linearly with tokens; the count
+            # (latency floor) does not — precompute both at one token
+            wire1, n_coll = decode_collective_bytes(
+                self.cfg, 1, self.shards, self.dtype_bytes)
+            self._coll_wire_per_token = wire1
+            self._coll_count = n_coll
+
+    # ------------------------------------------------------------ collectives
+    def collective_time(self, tokens: int) -> float:
+        """Per-forward-pass TP collective time on the ICI fabric for this
+        shard (ring all-reduces + MoE all-to-alls + logits all-gather, cf.
+        ``analytic_cost.decode_collective_bytes``). Zero at ``shards=1``."""
+        if self.shards <= 1 or tokens <= 0:
+            return 0.0
+        return (self._coll_wire_per_token * tokens / self.hw.ici_bw
+                + self._coll_count * self.hw.ici_latency_s)
 
     # ------------------------------------------------------------ remap unit
     @property
     def unit_bytes(self) -> int:
-        """Bytes per remappable unit (one pattern repeat)."""
+        """Bytes per remappable unit (one pattern repeat); the *per-shard
+        slice* of the repeat when the tenant spans a shard set."""
         v = self.cfg.vocab_size * self.cfg.d_model * self.dtype_bytes
-        return max((self.param_bytes - 2 * v) // self.repeats, 1)
+        per_set = max((self.total_param_bytes - 2 * v) // self.repeats, 1)
+        if self.shards == 1:
+            return per_set
+        return max(per_set // self.shards, 1)
 
     @property
     def t_transfer_unit(self) -> float:
@@ -81,12 +122,15 @@ class PerfModel:
         concurrently — max(compute, hbm, host-stream)."""
         flops = 2.0 * (self.active_param_bytes / self.dtype_bytes) * batch
         t_compute = flops / (self.hw.flops_bf16 * self.hw.mfu_ceiling)
-        kv = (kv_bytes_per_token(self.cfg, self.dtype_bytes) * avg_ctx
+        kv = (self.shard_kv_token_bytes * avg_ctx
               + const_state_bytes(self.cfg)) * batch
         hbm = self.param_bytes * resident_fraction + kv
         t_hbm = hbm / self.hw.hbm_bw
         t_stream = streamed_bytes / self.hw.host_link_bw
-        return max(t_compute, t_hbm, t_stream)
+        t = max(t_compute, t_hbm, t_stream)
+        if self.shards > 1:
+            t += self.collective_time(batch)
+        return t
 
     def pipeline_inputs(self, batch: int, avg_ctx: float,
                         plan: RemapPlan) -> tuple:
@@ -148,14 +192,20 @@ class PerfModel:
         overbill the very model whose layers were donated."""
         flops = 2.0 * (self.active_param_bytes / self.dtype_bytes) \
             * prompt_tokens * batch
-        # quadratic attention term
+        # quadratic attention term (head-sharded across the set)
         n_attn = sum(1 for k in self.cfg.layer_kinds() if k.startswith("attn"))
-        flops += (2.0 * n_attn * prompt_tokens ** 2 * self.cfg.num_heads
-                  * self.cfg.resolved_head_dim * 2 * batch)
+        attn = (2.0 * n_attn * prompt_tokens ** 2 * self.cfg.num_heads
+                * self.cfg.resolved_head_dim * 2 * batch)
+        if self.shards > 1:
+            attn /= self.degrees.heads
+        flops += attn
         t_compute = flops / (self.hw.flops_bf16 * self.hw.mfu_ceiling)
         t_hbm = self.param_bytes * resident_fraction / self.hw.hbm_bw
         t_stream = streamed_bytes / self.hw.host_link_bw
-        return max(t_compute, t_hbm, t_stream)
+        t = max(t_compute, t_hbm, t_stream)
+        if self.shards > 1:
+            t += self.collective_time(prompt_tokens * batch)
+        return t
 
     # --------------------------------------------------- expert granularity
     @property

@@ -127,6 +127,11 @@ class TenantSpec:
     mem_fraction: float = 0.35
     # optional workload binding (TraceSpec | DiurnalSpec)
     trace: Any = None
+    # model-parallel shard degree: this tenant is striped across a
+    # ``shards``-device shard set (lowered through the SERVING_RULES
+    # logical-axis layout — heads/kv_heads/mlp/experts/vocab over "model");
+    # 1 = a full replica per device, the historical behaviour
+    shards: int = 1
 
     def to_engine(self, steps_per_second: float = 1.0):
         """Lower to the functional engine's ``TenantConfig`` (SLO targets
@@ -136,6 +141,11 @@ class TenantSpec:
             raise ValueError(
                 "TenantSpec.params (model weights) is required to lower a "
                 "tenant to the functional engine")
+        if self.shards > 1:
+            raise NotImplementedError(
+                "the functional engine executes one device; tenants with "
+                "shards > 1 lower to the simulator's SPMD shard-set model "
+                "(use backend='sim')")
         return TenantConfig(
             cfg=self.cfg, params=self.params, max_batch=self.max_batch,
             max_context=self.max_context, priority=self.priority,
@@ -147,7 +157,8 @@ class TenantSpec:
         from repro.serving.simulator import SimTenantConfig
         return SimTenantConfig(
             cfg=self.cfg, max_batch=self.max_batch,
-            mem_fraction=self.mem_fraction, slo=self.slo)
+            mem_fraction=self.mem_fraction, slo=self.slo,
+            shards=self.shards)
 
 
 @dataclasses.dataclass
@@ -171,6 +182,35 @@ class RuntimeConfig:
     prefix_sharing: bool = False
     # engine lowering: one second of spec time equals this many steps
     steps_per_second: float = 1.0
+    # False: naive per-shard independent drains (the fig24 baseline);
+    # True: RemapDecision application + PlanDrain proceed in lock-step
+    # across every shard of a layer (the invariant)
+    shard_lockstep: bool = True
+
+    def shard_devices(self) -> int:
+        """Devices per serving unit: the max declared shard degree (a
+        shards=1 tenant on a bigger set holds a full replica per device)."""
+        return max((s.shards for s in self.tenants.values()), default=1)
+
+    def validate_fit(self, hw) -> None:
+        """Fail fast — BEFORE any allocator OOMs mid-run — when a tenant's
+        per-device resident footprint (sharded params + unsharded
+        recurrent state) cannot fit one shard's HBM, with the minimum
+        shard degree that would fit in the message."""
+        from repro.serving.perf_model import PerfModel, const_state_bytes
+        for name, spec in self.tenants.items():
+            pm = PerfModel(spec.cfg, hw, shards=spec.shards)
+            state = const_state_bytes(spec.cfg)
+            resident = pm.param_bytes + state
+            if resident > hw.hbm_bytes:
+                need = -(-pm.total_param_bytes
+                         // max(hw.hbm_bytes - state, 1))
+                raise ValueError(
+                    f"tenant {name!r} needs {resident / 2**30:.1f} GiB per "
+                    f"device but {hw.name} has {hw.hbm_bytes / 2**30:.1f} "
+                    f"GiB HBM (declared shards={spec.shards}); declare "
+                    f"TenantSpec(shards>={need}) to stripe it across a "
+                    f"shard set")
 
     def build(self, backend: str = "sim", **kw) -> ServingRuntime:
         if backend == "sim":
@@ -180,7 +220,15 @@ class RuntimeConfig:
         raise ValueError(f"unknown backend {backend!r}")
 
     def build_simulator(self, **kw) -> ServingRuntime:
+        from repro.serving.hw import GH200
         from repro.serving.simulator import Simulator
+        self.validate_fit(kw.get("hw", GH200))
+        shard_kw = {}
+        if self.shard_devices() > 1:
+            # keep the 1-shard lowering literally identical to the
+            # pre-shard-set call (byte-identical transparency contract)
+            shard_kw = dict(shard_devices=self.shard_devices(),
+                            shard_lockstep=self.shard_lockstep)
         return Simulator(
             {n: s.to_sim() for n, s in self.tenants.items()},
             mode=self.mode, scheduler=self.scheduler,
@@ -189,7 +237,7 @@ class RuntimeConfig:
             step_tokens=self.step_tokens,
             watermark_tokens=self.watermark_tokens,
             slack_margin=self.slack_margin,
-            prefix_sharing=self.prefix_sharing, **kw)
+            prefix_sharing=self.prefix_sharing, **shard_kw, **kw)
 
     def build_engine(self, **kw) -> ServingRuntime:
         from repro.serving.engine import ServingEngine

@@ -35,10 +35,11 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import (
     ControllerConfig, ExpertRemapState, MemoryInfo, MetadataStore, ModelInfo,
-    PlanDrain, PrefixIndex, RemapPlan, RemappingController, identity_plan,
+    PlanDrain, PrefixIndex, RemapPlan, RemappingController, ShardedPlanDrain,
+    identity_plan,
 )
 from repro.serving.hw import HardwareSpec, GH200
-from repro.serving.perf_model import PerfModel, kv_bytes_per_token
+from repro.serving.perf_model import PerfModel
 from repro.serving.request import (
     DECODE_WATERMARK_TOKENS, Request, ServingMetrics,
 )
@@ -55,6 +56,10 @@ class SimTenantConfig:
     mem_fraction: float = 0.35     # paper Table 1 GPU reservation
     # per-tenant SLO: targets in SECONDS (the simulator's clock)
     slo: SLOSpec = dataclasses.field(default_factory=SLOSpec)
+    # model-parallel degree: >1 means this tenant is striped across the
+    # shard set's devices (per-shard param/KV/unit bytes via PerfModel);
+    # 1 means a full replica on EVERY device of the set
+    shards: int = 1
 
 
 class SimTenant:
@@ -62,7 +67,7 @@ class SimTenant:
                  prefix_page: int = 0):
         self.name = name
         self.cfg = tc.cfg
-        self.perf = PerfModel(tc.cfg, hw)
+        self.perf = PerfModel(tc.cfg, hw, shards=tc.shards)
         self.max_batch = tc.max_batch
         self.reserved_bytes = int(tc.mem_fraction * hw.hbm_bytes)
         self.kv_capacity_base = max(
@@ -73,7 +78,9 @@ class SimTenant:
         # (chunked prefill); their KV bytes are reserved up front, exactly
         # like the engine allocating the full prompt's pages at admission
         self.prefilling: List[Request] = []
-        self.kv_token_bytes = max(kv_bytes_per_token(tc.cfg), 1)
+        # per-device KV bytes per token: the head-striped slice for a
+        # sharded tenant, the full row for a replicated one
+        self.kv_token_bytes = max(self.perf.shard_kv_token_bytes, 1)
         self.needs_reload = 0.0    # pending cold-start reload seconds
         # prefix sharing (block-granular; virtual page handles)
         self.index: Optional[PrefixIndex] = \
@@ -135,10 +142,17 @@ class Simulator:
         expert_granular: bool = False,    # MoE tenants: remap per expert
         expert_routing=None,              # {model: traces.ZipfRouting}
         expert_pin_fraction: float = 0.125,
+        shard_devices: int = 1,           # devices in this shard set (SPMD)
+        shard_lockstep: bool = True,      # False = naive per-shard drains
     ):
         assert mode in ("mirage", "vllm", "swap")
         self.mode = mode
         self.hw = hw
+        self.shard_devices = max(int(shard_devices), 1)
+        self.shard_lockstep = shard_lockstep
+        # ticks where a layer was resident on some shards but not others —
+        # zero by construction under lock-step coordination
+        self.shard_partial_drain_ticks = 0
         self.uniform_selection = uniform_selection
         self.incremental_apply = incremental_apply
         self.prefill_chunk_tokens = int(prefill_chunk_tokens)
@@ -669,7 +683,17 @@ class Simulator:
                     target.n, target.alpha, target.m, cyc,
                     tuple(range(target.m, target.n)))
             cur = self._current_plan(d.model)
-            drain = PlanDrain(cur, target, self._unit_bytes(d.model))
+            if self.shard_devices > 1:
+                # the decision applies to the whole shard set: every device
+                # drains its own slice of each remap unit over its own host
+                # link — in lock-step (one logical drain) or naively
+                # staggered (the fig24 baseline)
+                drain = ShardedPlanDrain(
+                    cur, target, self._unit_bytes(d.model),
+                    shards=self.shard_devices,
+                    lockstep=self.shard_lockstep)
+            else:
+                drain = PlanDrain(cur, target, self._unit_bytes(d.model))
             if self.incremental_apply and not drain.done:
                 self._drains[d.model] = drain
             else:
@@ -701,6 +725,13 @@ class Simulator:
                 del self._drains[name]
                 self._live_plan[name] = drain.target
                 self._cold[name] = True    # plan changed: pipeline restarts
+            elif getattr(drain, "last_advance_completions", 0):
+                # independent per-shard drains: a shard flipped to the
+                # target while the set must keep serving the interim —
+                # its pipeline restarts cold against the rest of the set
+                self._cold[name] = True
+        if any(getattr(d, "partial", False) for d in self._drains.values()):
+            self.shard_partial_drain_ticks += 1
         return dt
 
     def _on_pressure(self, t: SimTenant) -> float:

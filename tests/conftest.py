@@ -13,3 +13,14 @@ jax.config.update("jax_enable_x64", False)
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_jax_compile_cache():
+    """Engine tests jit per tenant instance (no cross-module reuse), so
+    compiled executables accumulate for the whole process; past a few
+    hundred, XLA's CPU backend_compile can crash on the suite's largest
+    MoE graph. Dropping the caches at module teardown bounds the
+    accumulation without touching intra-module fixtures."""
+    yield
+    jax.clear_caches()

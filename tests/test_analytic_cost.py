@@ -1,0 +1,86 @@
+"""Golden serving-cost tests: the analytic decode/prefill StepCost totals
+for a GQA dense config and the two MoE tenants are pinned so a refactor of
+the cost model (or of the configs it reads) cannot silently shift the
+numbers every scheduler / benchmark decision is derived from. Plus the
+1-shard parity contract: ``decode_cost``'s HBM accounting and the serving
+``PerfModel``'s scalar decode path must agree byte-for-byte."""
+import pytest
+
+from repro.configs import ARCHS
+from repro.configs.base import ShapeConfig
+from repro.distributed.analytic_cost import (
+    decode_collective_bytes, decode_cost, prefill_collective_bytes,
+    prefill_cost,
+)
+from repro.serving.hw import GH200
+from repro.serving.perf_model import PerfModel, kv_bytes_per_token
+
+DECODE = ShapeConfig("d", 4096, 8, "decode")
+PREFILL = ShapeConfig("p", 4096, 1, "prefill")
+
+# (arch, decode flops, decode bytes, prefill flops, prefill bytes) — golden
+GOLDEN = [
+    ("granite-3-8b",       1.522031e11, 2.211308e10, 7.627902e13, 1.875763e10),
+    ("moonshot-v1-16b-a3b", 4.564409e11, 6.900089e10, 3.875846e13, 5.853191e10),
+    ("kimi-k2-1t-a32b",    1.669718e13, 2.089498e12, 3.236947e14, 2.086811e12),
+]
+
+
+@pytest.mark.parametrize("arch,dflops,dbytes,pflops,pbytes", GOLDEN,
+                         ids=[g[0] for g in GOLDEN])
+def test_golden_decode_and_prefill_costs(arch, dflops, dbytes, pflops, pbytes):
+    cfg = ARCHS[arch]
+    d = decode_cost(cfg, DECODE, 1)
+    p = prefill_cost(cfg, PREFILL, 1)
+    assert d.total_flops == pytest.approx(dflops, rel=1e-5)
+    assert d.total_bytes == pytest.approx(dbytes, rel=1e-5)
+    assert p.total_flops == pytest.approx(pflops, rel=1e-5)
+    assert p.total_bytes == pytest.approx(pbytes, rel=1e-5)
+    # decode is bandwidth-dominated, prefill compute-dominated: the ratio
+    # of useful flops per HBM byte must flip between the two regimes
+    assert p.total_flops / p.total_bytes > d.total_flops / d.total_bytes
+
+
+# (arch, decode wire bytes @ b=8 s=4, n_coll, prefill wire @ 4096 tok s=8)
+GOLDEN_COLL = [
+    ("granite-3-8b",        8.454180e6, 81,  5.049964e9),
+    ("moonshot-v1-16b-a3b", 2.084045e7, 193, 1.244869e10),
+    ("kimi-k2-1t-a32b",     1.069056e8, 245, 6.385828e10),
+]
+
+
+@pytest.mark.parametrize("arch,wire,n,pwire", GOLDEN_COLL,
+                         ids=[g[0] for g in GOLDEN_COLL])
+def test_golden_collective_terms(arch, wire, n, pwire):
+    cfg = ARCHS[arch]
+    w4, n4 = decode_collective_bytes(cfg, 8, 4)
+    assert w4 == pytest.approx(wire, rel=1e-5)
+    assert n4 == n
+    w8, n8 = prefill_collective_bytes(cfg, 4096, 8)
+    assert w8 == pytest.approx(pwire, rel=1e-5)
+    assert n8 == n4          # count depends on topology, not tokens
+    # degree 1 contributes nothing — the transparency contract
+    assert decode_collective_bytes(cfg, 8, 1) == (0.0, 0)
+    assert prefill_collective_bytes(cfg, 4096, 1) == (0.0, 0)
+
+
+def test_one_shard_decode_cost_matches_perf_model_bytes():
+    """The distributed cost model at shards=1 and the serving PerfModel
+    charge the SAME HBM bytes for one decode step: params read once plus
+    the KV rectangle. Exact integer equality, not approx."""
+    cfg = ARCHS["llama3-8b"]          # no sliding window, no recurrent state
+    b, ctx = 8, 2048
+    d = decode_cost(cfg, ShapeConfig("d", ctx, b, "decode"), 1)
+    pm = PerfModel(cfg, GH200)
+    assert d.hbm_bytes["params"] == pm.param_bytes
+    assert d.hbm_bytes["kv_read"] == pm.shard_kv_token_bytes * ctx * b
+    assert d.hbm_bytes["state"] == 0.0
+    # llama3-8b decode at this shape is HBM-bandwidth-bound, so the scalar
+    # decode time IS those bytes over the link
+    assert pm.decode_step_time(b, ctx) == pytest.approx(
+        (pm.param_bytes + pm.shard_kv_token_bytes * ctx * b) / GH200.hbm_bw)
+
+
+def test_kv_bytes_per_token_gqa():
+    cfg = ARCHS["granite-3-8b"]       # 40L, kv=8, head_dim=128
+    assert kv_bytes_per_token(cfg) == 2 * 8 * 128 * 2 * 40

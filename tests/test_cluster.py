@@ -11,7 +11,7 @@ import pytest
 
 from repro.cluster import (
     CoordinatedRemapPolicy, LEAST_LOADED, PREFIX_AFFINITY, ReplicaGroup,
-    Router, SLACK_AWARE,
+    Router, SLACK_AWARE, ShardSet,
 )
 from repro.configs import ARCHS, scaled_config
 from repro.models import build_model
@@ -365,3 +365,60 @@ def test_from_config_builds_coordinated_fleet(sim_config):
     assert len(g.replicas) == 2
     assert isinstance(g.remap_policy, CoordinatedRemapPolicy)
     assert ReplicaGroup.from_config(sim_config, 1).remap_policy is None
+
+
+# ------------------------------------------------- shard-set transparency
+def test_one_shard_set_is_transparent_sim(sim_config):
+    """A 1-shard ShardSet is pure delegation: byte-identical per-request
+    results and metrics vs the bare runtime (the shard-set extension of
+    the single-replica transparency contract)."""
+    from repro.serving.runtime import ServingRuntime
+
+    sim = sim_config.build("sim")
+    m_direct = sim.run(sim_config.trace(seed=3))
+    unit = ShardSet(sim_config.build("sim"), shards=1)
+    assert isinstance(unit, ServingRuntime)     # structural protocol check
+    group = ReplicaGroup([unit], router=Router(SLACK_AWARE))
+    m_group = group.run(sim_config.trace(seed=3))
+    assert _per_request(sim.finished) == _per_request(
+        group.replicas[0].finished)
+    assert m_direct == m_group
+    assert group.partial_drain_ticks == 0
+
+
+def test_one_shard_set_is_transparent_engine(engine_config):
+    def trace():
+        return tiny_trace(["A", "B"], n_per_model=3, prompt_len=10,
+                          max_new=6, vocab=256)
+
+    eng = engine_config.build("engine", base_kv_pages=64, page_size=4)
+    eng.submit(trace())
+    eng.run(max_steps=2_000)
+    unit = ShardSet(
+        engine_config.build("engine", base_kv_pages=64, page_size=4))
+    group = ReplicaGroup([unit])
+    m_group = group.run(trace())
+    g0 = group.replicas[0]
+    assert _per_request(eng.finished) == _per_request(g0.finished)
+    assert {r.rid: tuple(r.generated) for r in eng.finished} == \
+        {r.rid: tuple(r.generated) for r in g0.finished}
+    assert eng.metrics() == m_group
+
+
+def test_sharded_tenant_lowers_to_shard_sets(sim_config):
+    """A config declaring shard degrees builds ShardSet units through
+    ReplicaGroup.from_config, routed and drain-tracked as one unit."""
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        sim_config,
+        tenants={
+            n: dataclasses.replace(s, shards=4 if n == "chat" else 1)
+            for n, s in sim_config.tenants.items()})
+    g = ReplicaGroup.from_config(cfg, 2, backend="sim")
+    assert all(isinstance(rt, ShardSet) and rt.shards == 4
+               for rt in g.replicas)
+    assert g.replicas[0].runtime.shard_devices == 4
+    m = g.run(cfg.trace(seed=3))
+    assert m.unfinished == 0
+    assert g.partial_drain_ticks == 0          # lock-step is the default

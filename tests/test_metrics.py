@@ -194,6 +194,61 @@ def test_merge_slo_attainment_pools_requests():
         == pytest.approx(0.5)
 
 
+def _replica_slices():
+    """Three replica-level metric slices with distinct tail shapes, the
+    shard-set fleet shape: replicas 0+1 form one shard set, replica 2
+    another."""
+    fast = ServingMetrics.from_requests(
+        [_req(f"f{i}", "m", 0.0, [0.5 + 0.01 * j for j in range(20)])
+         for i in range(2)], makespan=5.0)
+    mid = ServingMetrics.from_requests(
+        [_req("m", "m", 0.0, [0.8 + 0.05 * j for j in range(20)])],
+        makespan=6.0)
+    slow = ServingMetrics.from_requests(
+        [_req("s", "m", 0.0, [2.0 + 0.5 * j for j in range(10)])],
+        makespan=8.0)
+    return fast, mid, slow
+
+
+def test_merge_is_associative_over_shard_set_grouping():
+    """Fleet rollups happen in two shapes — per-shard-set first, then
+    across sets (ReplicaGroup.metrics over ShardSets), or flat over every
+    runtime. Both must yield the same pooled tails and counters, or the
+    reported p99 would depend on cluster topology rather than traffic."""
+    fast, mid, slow = _replica_slices()
+    nested = ServingMetrics.merge(
+        [ServingMetrics.merge([fast, mid]), ServingMetrics.merge([slow])])
+    flat = ServingMetrics.merge([fast, mid, slow])
+    assert nested.p99_tbt == pytest.approx(flat.p99_tbt)
+    assert nested.p50_tbt == pytest.approx(flat.p50_tbt)
+    assert nested.p99_ttft == pytest.approx(flat.p99_ttft)
+    assert nested.mean_ttft == pytest.approx(flat.mean_ttft)
+    assert nested.total_tokens == flat.total_tokens
+    assert nested.makespan == flat.makespan
+    assert nested.throughput_tok_s == pytest.approx(flat.throughput_tok_s)
+    # and the tails really are the pooled-sample tails, not tail-of-tails
+    pooled = ([0.01] * 38 + [0.05] * 19 + [0.5] * 9)
+    assert flat.p99_tbt == pytest.approx(percentile(pooled, 99))
+
+
+def test_merge_associativity_preserves_nan_tiers_both_orders():
+    """An all-empty shard set must stay NaN whether it is merged into the
+    fleet before or after the live sets — (empty ∪ live) ∪ live ==
+    empty ∪ (live ∪ live)."""
+    fast, mid, _ = _replica_slices()
+    empty = ServingMetrics.from_requests([], makespan=0.0)
+    left = ServingMetrics.merge([ServingMetrics.merge([empty, fast]), mid])
+    right = ServingMetrics.merge([empty, ServingMetrics.merge([fast, mid])])
+    assert left.p99_tbt == pytest.approx(right.p99_tbt)
+    assert left.total_tokens == right.total_tokens
+    # all-empty stays NaN regardless of nesting depth
+    nested_empty = ServingMetrics.merge(
+        [ServingMetrics.merge([empty, empty]), empty])
+    assert np.isnan(nested_empty.p99_tbt)
+    assert np.isnan(nested_empty.p99_ttft)
+    assert nested_empty.total_tokens == 0
+
+
 # --------------------------------------------------- live-context T_c feedback
 @pytest.fixture(scope="module")
 def engine():

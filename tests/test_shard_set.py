@@ -1,0 +1,248 @@
+"""Shard-set serving: lock-step vs independent cross-shard drains, the
+shared logical KV page space, shard-aware PerfModel byte accounting,
+fail-fast fit validation, and the spec_for divisibility warning."""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import (
+    PagedKVAllocator, PlanDrain, ShardedPagedKVAllocator, ShardedPlanDrain,
+    identity_plan, uniform_plan,
+)
+from repro.serving.hw import GH200
+from repro.serving.perf_model import (
+    PerfModel, const_state_bytes, kv_bytes_per_token,
+)
+from repro.serving.runtime import RuntimeConfig, TenantSpec
+from repro.serving.simulator import SimTenantConfig, Simulator
+
+
+# --------------------------------------------------- ShardedPlanDrain
+def _reversion(n=8, alpha=2, m=4):
+    """current: m cycling layers; target: everything resident — the
+    drain must bring every cycling layer home over the host link."""
+    return uniform_plan(n, alpha, m), identity_plan(n)
+
+
+def test_lockstep_drain_matches_plain_plandrain():
+    cur, tgt = _reversion()
+    plain = PlanDrain(cur, tgt, 100)
+    sharded = ShardedPlanDrain(cur, tgt, 100, shards=4, lockstep=True)
+    assert sharded.transition_bytes == plain.transition_bytes
+    while not plain.done:
+        u_p, _ = plain.advance(100)
+        u_s, _ = sharded.advance(100)
+        assert u_s == u_p
+        assert sharded.done == plain.done
+        assert sharded.current_plan == plain.current_plan
+        assert not sharded.partial          # never half-drained
+    assert sharded.done and sharded.current_plan == tgt
+
+
+def test_independent_drain_staggers_and_reports_partial():
+    cur, tgt = _reversion(n=8, alpha=2, m=4)
+    d = ShardedPlanDrain(cur, tgt, 100, shards=4, lockstep=False, skew=1)
+    n_layers = len(PlanDrain(cur, tgt, 100).to_load)
+    saw_partial = ticks = flips = 0
+    while not d.done:
+        d.advance(100)
+        ticks += 1
+        flips += d.last_advance_completions
+        saw_partial += d.partial
+        if not d.done:
+            # mid-drain the SET must keep serving the shared interim
+            assert d.current_plan != tgt
+        assert ticks < 100
+    # shard i starts i ticks late -> the set takes (shards-1) extra ticks
+    assert ticks == n_layers + 3
+    assert flips == 4                       # every shard flipped exactly once
+    assert saw_partial > 0                  # the invalid state, observed
+    assert d.current_plan == tgt
+
+
+def test_lockstep_is_the_1_shard_degenerate_case():
+    cur, tgt = _reversion()
+    one = ShardedPlanDrain(cur, tgt, 100, shards=1, lockstep=False)
+    plain = PlanDrain(cur, tgt, 100)
+    while not plain.done:
+        assert one.advance(100)[0] == plain.advance(100)[0]
+        assert not one.partial
+    assert one.done
+
+
+# ---------------------------------------------- simulator drain plumbing
+def _sim(**kw):
+    return Simulator(
+        {"m": SimTenantConfig(ARCHS["llama3-8b"], max_batch=8,
+                              mem_fraction=0.3)},
+        mode="mirage", **kw)
+
+
+@pytest.mark.parametrize("lockstep,expect_partial", [(True, 0), (False, 1)])
+def test_simulator_counts_partial_drain_ticks(lockstep, expect_partial):
+    sim = _sim(shard_devices=4, shard_lockstep=lockstep)
+    cur = sim._current_plan("m")
+    tgt = uniform_plan(cur.n, 2, 4)
+    # reversion direction so to_load is non-empty: start FROM the remap
+    sim._live_plan["m"] = tgt
+    drain = ShardedPlanDrain(tgt, identity_plan(cur.n),
+                             sim._unit_bytes("m"),
+                             shards=4, lockstep=lockstep)
+    sim._drains["m"] = drain
+    guard = 0
+    while sim._drains and guard < 100:
+        sim._advance_drains()
+        guard += 1
+    if expect_partial:
+        assert sim.shard_partial_drain_ticks > 0
+    else:
+        assert sim.shard_partial_drain_ticks == 0
+    assert sim._cold.get("m")               # plan switch restarts pipeline
+
+
+def test_simulator_default_has_no_shard_state():
+    sim = _sim()
+    assert sim.shard_devices == 1
+    assert sim.shard_partial_drain_ticks == 0
+
+
+# ------------------------------------------------- shard-aware PerfModel
+def test_perf_model_shards_divide_bytes():
+    cfg = ARCHS["llama3-8b"]
+    full = PerfModel(cfg, GH200)
+    quarter = PerfModel(cfg, GH200, shards=4)
+    assert quarter.param_bytes == full.param_bytes // 4
+    assert quarter.total_param_bytes == full.param_bytes
+    assert quarter.unit_bytes == pytest.approx(full.unit_bytes / 4, rel=0.01)
+    # 8 KV heads / 4 shards -> per-device KV slice is a quarter row
+    assert quarter.shard_kv_token_bytes == kv_bytes_per_token(cfg) // 4
+    # per-shard slice over the same host link -> 4x faster unit transfer
+    assert quarter.t_transfer_unit == pytest.approx(
+        full.t_transfer_unit / 4, rel=0.01)
+
+
+def test_perf_model_1_shard_is_bit_identical():
+    cfg = ARCHS["granite-3-8b"]
+    a, b = PerfModel(cfg, GH200), PerfModel(cfg, GH200, shards=1)
+    assert a.param_bytes == b.param_bytes
+    assert a.unit_bytes == b.unit_bytes
+    for batch, ctx in ((1, 512), (8, 2048)):
+        assert a.decode_step_time(batch, ctx) == b.decode_step_time(batch, ctx)
+        assert a.prefill_time(ctx) == b.prefill_time(ctx)
+
+
+def test_perf_model_collectives_charge_only_sharded():
+    cfg = ARCHS["llama3-8b"]
+    pm = PerfModel(cfg, GH200, shards=4)
+    assert PerfModel(cfg, GH200).collective_time(8) == 0.0
+    assert pm.collective_time(8) > 0.0
+    # collective term makes the sharded decode slower than naive /4
+    # scaling at small batch (latency floor dominates)
+    assert pm.decode_step_time(1, 512) > 0.0
+
+
+# --------------------------------------------- shared logical page space
+def test_sharded_allocator_shares_logical_pages():
+    alloc = ShardedPagedKVAllocator(16, 4, shards=4,
+                                    logical_page_bytes=4096)
+    assert alloc.shard_page_bytes == 1024
+    alloc.allocate("a", 10)
+    alloc.allocate("b", 6)
+    tables = alloc.shard_page_tables(["a", "b"], 4)
+    assert tables.shape == (4, 2, 4)
+    for s in range(1, 4):
+        assert (tables[s] == tables[0]).all()
+    alloc.check_invariants()
+    # single-decision lifecycle: free releases on ALL shards at once
+    alloc.free("a")
+    assert alloc.used_pages == alloc.pages_needed(6)
+    alloc.check_invariants()
+
+
+def test_sharded_allocator_degree_1_matches_plain():
+    plain = PagedKVAllocator(8, 4)
+    sharded = ShardedPagedKVAllocator(8, 4, shards=1)
+    for a in (plain, sharded):
+        a.allocate("x", 9)
+        a.allocate("y", 3)
+        a.free("x")
+    assert (plain.page_table(["y"], 3) == sharded.page_table(["y"], 3)).all()
+    assert plain.free_pages == sharded.free_pages
+
+
+# ------------------------------------------------------ fail-fast sizing
+def test_unshardable_tenant_fails_fast_with_min_degree():
+    big = ARCHS["kimi-k2-1t-a32b"]           # ~2 TB bf16: never fits one dev
+    cfg = RuntimeConfig(tenants={"big": TenantSpec(big)})
+    with pytest.raises(ValueError, match=r"shards>=\d+"):
+        cfg.build_simulator()
+    # the suggested degree from the message actually validates
+    import re
+    try:
+        cfg.validate_fit(GH200)
+    except ValueError as e:
+        need = int(re.search(r"shards>=(\d+)", str(e)).group(1))
+    ok = RuntimeConfig(tenants={"big": TenantSpec(big, shards=need)})
+    ok.validate_fit(GH200)                   # no raise
+
+
+def test_shardable_tenant_validates():
+    RuntimeConfig(
+        tenants={"m": TenantSpec(ARCHS["llama3-8b"])}).validate_fit(GH200)
+
+
+def test_engine_lowering_rejects_shard_degrees():
+    spec = TenantSpec(ARCHS["llama3-8b"], params={"w": 0}, shards=4)
+    with pytest.raises(NotImplementedError, match="one device"):
+        spec.to_engine()
+
+
+# ------------------------------------- spec_for divisibility warn-once
+class _FakeMesh:
+    def __init__(self, sizes):
+        self.sizes = dict(sizes)
+        self.axis_names = tuple(self.sizes)
+
+    @property
+    def shape(self):
+        return dict(self.sizes)
+
+
+def test_spec_for_warns_once_per_axis_and_mesh():
+    from repro.distributed.sharding import spec_for
+
+    mesh = _FakeMesh({"data": 2, "model": 48})   # 48 does not divide 8
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        spec_for(("kv_heads", None), (8, 64), mesh)
+        spec_for(("kv_heads", None), (8, 64), mesh)   # same key: silent
+    drops = [x for x in w if "kv_heads" in str(x.message)]
+    assert len(drops) == 1
+    assert "48" in str(drops[0].message)
+
+
+def test_serving_shard_degrees_lowering():
+    from repro.distributed.sharding import serving_shard_degrees
+
+    cfg = ARCHS["llama3-8b"]                 # 32H / 8KV GQA
+    d4 = serving_shard_degrees(cfg, 4)
+    assert d4.heads == 4 and d4.kv_heads == 4
+    # 8 KV heads on 48 shards: kv degrades to replication (warned once)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        d48 = serving_shard_degrees(cfg, 48)
+    assert d48.kv_heads == 1
+    assert any("kv_heads" in str(x.message) for x in w)
+    # degree 1 is the no-op lowering
+    d1 = serving_shard_degrees(cfg, 1)
+    assert d1.heads == d1.kv_heads == 1
+
+
+def test_const_state_not_sharded():
+    """Recurrent state is modeled replicated (conservative): the sharded
+    PerfModel charges the full const_state per device."""
+    cfg = ARCHS["llama3-8b"]
+    assert const_state_bytes(cfg) == 0       # attention-only: nothing to split
