@@ -911,9 +911,129 @@ def fig24_shard_sets(out_json: str = None):
     return rows
 
 
+def fig25_trace_replay(out_json: str = None, guard_requests: int = 50_000):
+    """Production trace replay: the Azure-format sample slice
+    (``benchmarks/traces/azure_llm_sample.csv``) time-compressed 10x and
+    replayed onto a two-tenant SLO-tiered config across
+    {mirage, vllm, swap} at 1/2/4 replicas, every run executed on BOTH
+    simulator paths. Reports latency-tier p99 TBT / p99 TTFT and
+    simulated-requests/sec before (reference path) vs after (``fast=True``)
+    — the fleet metrics are asserted identical, so the replica sweep
+    doubles as a cluster-level differential test. The 50k-request
+    hot-path measurement from ``tools/bench_sim_throughput.py`` (the
+    acceptance ratio) is folded into the JSON. Writes
+    BENCH_trace_replay.json."""
+    import dataclasses as dc
+    import importlib.util
+    import json
+    import math
+    import os
+    import time
+
+    from benchmarks.common import frac
+    from repro.cluster import ReplicaGroup
+    from repro.configs import ARCHS
+    from repro.serving import (
+        BEST_EFFORT, LATENCY, ReplaySpec, RuntimeConfig, SLOSpec, TenantSpec,
+    )
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    trace_path = os.path.join(here, "traces", "azure_llm_sample.csv")
+    A, B = "llama3-8b", "h2o-danube-3-4b"
+
+    def config(mode):
+        # both tenants replay the same arrival process (rids stay unique
+        # via the per-tenant replay prefix); 10x time compression turns
+        # the sample's 2 req/s into real KV pressure
+        return RuntimeConfig(
+            tenants={
+                A: TenantSpec(
+                    ARCHS[A], max_batch=64, mem_fraction=frac(A, 8.0),
+                    slo=SLOSpec(ttft_target=10.0, tbt_target=0.2,
+                                tier=LATENCY),
+                    trace=ReplaySpec(model=A, path=trace_path,
+                                     time_scale=0.1)),
+                B: TenantSpec(
+                    ARCHS[B], max_batch=64, mem_fraction=frac(B, 5.0),
+                    slo=SLOSpec(ttft_target=30.0, tbt_target=0.6,
+                                tier=BEST_EFFORT),
+                    trace=ReplaySpec(model=B, path=trace_path,
+                                     time_scale=0.1)),
+            },
+            mode=mode, scheduler="slo")
+
+    rows = []
+    for mode in ("vllm", "swap", "mirage"):
+        for n_replicas in (1, 2, 4):
+            walls, mets, tiers = {}, {}, {}
+            for fast in (False, True):
+                cfg = config(mode)
+                group = ReplicaGroup.from_config(cfg, n_replicas, fast=fast)
+                reqs = cfg.trace(seed=0)
+                group.submit(reqs)
+                t0 = time.perf_counter()
+                while group.busy() and group.ticks < 10_000_000:
+                    group.tick()
+                walls[fast] = time.perf_counter() - t0
+                mets[fast] = group.metrics()
+                tiers[fast] = group.tier_metrics()
+            da = dc.asdict(mets[False])
+            db = dc.asdict(mets[True])
+            for k in da:
+                if isinstance(da[k], float) and math.isnan(da[k]) \
+                        and math.isnan(db[k]):
+                    continue
+                assert da[k] == db[k], \
+                    f"fast path diverged on {k}: {mode} x{n_replicas}"
+            lat = tiers[True][LATENCY]
+            n = len(mets[True]._per_request)
+            rows.append(["fig25", mode, n_replicas,
+                         lat.p99_tbt, lat.p99_ttft,
+                         mets[True].preemptions,
+                         round(n / walls[False], 1),
+                         round(n / walls[True], 1)])
+    emit(rows, ["bench", "mode", "replicas", "lat_p99_tbt_s",
+                "lat_p99_ttft_s", "preempt", "ref_req_per_s",
+                "fast_req_per_s"])
+
+    # the 50k hot-path acceptance measurement (identical-metrics asserted
+    # inside measure()); importlib because tools/ is not a package
+    spec = importlib.util.spec_from_file_location(
+        "bench_sim_throughput",
+        os.path.join(here, "..", "tools", "bench_sim_throughput.py"))
+    bst = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(bst)
+    guard = bst.measure(guard_requests)
+    print(f"# 50k hot path: reference "
+          f"{guard['reference']['requests_per_s']:.1f} req/s, fast "
+          f"{guard['fast']['requests_per_s']:.1f} req/s "
+          f"({guard['speedup']:.1f}x)")
+
+    path = out_json or os.path.join(here, "BENCH_trace_replay.json")
+    with open(path, "w") as f:
+        json.dump({
+            "bench": "fig25_trace_replay",
+            "workload": "azure_llm_sample.csv (400 synthetic rows, Azure "
+                        "schema) x2 tenants, time_scale=0.1, SLO tiers "
+                        "(latency ttft<=10s tbt<=0.2s / best-effort), "
+                        "GH200, slo scheduler",
+            "replica_sweep": [dict(zip(
+                ["mode", "replicas", "lat_p99_tbt_s", "lat_p99_ttft_s",
+                 "preemptions", "ref_req_per_s", "fast_req_per_s"],
+                r[1:])) for r in rows],
+            "throughput_guard": guard,
+            "headline": "fast path bit-identical to reference across "
+                        "modes x replica counts; "
+                        f"{guard['speedup']:.1f}x simulated-requests/sec "
+                        f"on the {guard['n_requests']}-request fixture",
+        }, f, indent=2)
+    print(f"# wrote {path}")
+    return rows
+
+
 ALL = [fig8_temporal, fig9_varied_rates, fig10_varied_inputs, fig11_mru_lru,
        fig12_spatial, fig13_strict_isolation, fig14_swap_vs_remap,
        fig15_layer_selection, fig16_dynamic_reversion, fig17_remap_cap,
        fig18_prefix_sharing, fig19_chunked_prefill, fig20_slo_tiers,
        fig21_async_pipeline, fig22_multi_replica, fig23_expert_remap,
-       fig24_shard_sets]
+       fig24_shard_sets, fig25_trace_replay]

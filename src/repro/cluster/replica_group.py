@@ -108,16 +108,24 @@ class ReplicaGroup:
         with ``arrival <= min(busy replicas' horizon)``. When the whole
         fleet is idle, release the next arrival unconditionally and let
         the routed replica fast-forward its clock — the same thing a
-        standalone runtime does with its internal queue. The horizon is
-        recomputed after every dispatch (the routed replica is busy now
-        and its own horizon governs the rest of the burst)."""
+        standalone runtime does with its internal queue. Only a submit to
+        a replica can change that replica's busy()/horizon(), so one
+        snapshot plus a refresh of the routed replica after each handover
+        keeps the loop O(replicas + dispatched) instead of re-scanning
+        every replica (busy() walks its tenant queues) per request."""
+        if not self._incoming:
+            return
+        horizons = {i: rt.horizon()
+                    for i, rt in enumerate(self.replicas) if rt.busy()}
         while self._incoming:
-            busy_h = [rt.horizon() for rt in self.replicas if rt.busy()]
-            horizon = min(busy_h) if busy_h else self._incoming[0].arrival
+            horizon = min(horizons.values()) if horizons \
+                else self._incoming[0].arrival
             if self._incoming[0].arrival > horizon:
                 break
             r = self._incoming.popleft()
-            self.replicas[self.router.route(r, self.replicas)].submit([r])
+            i = self.router.route(r, self.replicas)
+            self.replicas[i].submit([r])
+            horizons[i] = self.replicas[i].horizon()
 
     def run(self, requests: Optional[List[Request]] = None,
             max_ticks: int = 10_000_000) -> ServingMetrics:

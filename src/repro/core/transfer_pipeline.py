@@ -184,9 +184,12 @@ def sync_step_time(plan: RemapPlan, t_layer_compute: float,
 # pipeline-based feasibility (supersedes the closed-form eqs. 4/5 caps)
 # ---------------------------------------------------------------------------
 
+@lru_cache(maxsize=1 << 12)
 def uniform_plan(n: int, alpha: int, m: int) -> RemapPlan:
     """Uniform-interval plan with explicit m — THE plan constructor shared
-    by feasibility scans, benchmarks, and tests."""
+    by feasibility scans, benchmarks, and tests. Cached: RemapPlan is
+    frozen and the controller rebuilds the same handful of plans on every
+    feasibility scan."""
     cyc = tuple(uniform_interval_layers(n, m))
     res = tuple(i for i in range(n) if i not in set(cyc))
     return RemapPlan(n, alpha, m, cyc, res)

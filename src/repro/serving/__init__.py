@@ -9,6 +9,10 @@ from repro.serving.slo import (
 from repro.serving.scheduler import (
     SLOScheduler, SpatialScheduler, TemporalScheduler, make_scheduler,
 )
+from repro.serving.trace_replay import (
+    ReplaySpec, TraceRecord, load_trace, replay_trace, synth_records,
+    write_sample_traces,
+)
 from repro.serving.traces import (
     ConversationSpec, DiurnalSpec, TraceSpec, diurnal_trace, make_trace,
     multi_turn_trace, tiny_trace,

@@ -62,6 +62,10 @@ class PerfModel:
     shards: int = 1            # model-parallel degree; models ONE shard
 
     def __post_init__(self):
+        self._t_compute_cache: Optional[float] = None
+        self._const_state_bytes = const_state_bytes(self.cfg)
+        self._n_attn = sum(1 for k in self.cfg.layer_kinds()
+                           if k.startswith("attn"))
         self.pattern, self.repeats = block_pattern(self.cfg)
         self.param_bytes = self.cfg.param_count() * self.dtype_bytes
         self.active_param_bytes = self.cfg.active_param_count() * self.dtype_bytes
@@ -109,8 +113,13 @@ class PerfModel:
 
     @property
     def t_compute_layer_decode(self) -> float:
-        """Per-unit decode compute time at batch=1 (conservative T_c)."""
-        return self.decode_step_time(1, 512) / self.repeats
+        """Per-unit decode compute time at batch=1 (conservative T_c).
+        A pure function of the immutable model/hardware pair, cached: the
+        mirage control loop reads it for every tenant on every iteration."""
+        if self._t_compute_cache is None:
+            self._t_compute_cache = self.decode_step_time(1, 512) \
+                / self.repeats
+        return self._t_compute_cache
 
     # ------------------------------------------------------------- decode/TBT
     def _decode_scalar(self, batch: int, avg_ctx: float,
@@ -123,7 +132,7 @@ class PerfModel:
         flops = 2.0 * (self.active_param_bytes / self.dtype_bytes) * batch
         t_compute = flops / (self.hw.flops_bf16 * self.hw.mfu_ceiling)
         kv = (self.shard_kv_token_bytes * avg_ctx
-              + const_state_bytes(self.cfg)) * batch
+              + self._const_state_bytes) * batch
         hbm = self.param_bytes * resident_fraction + kv
         t_hbm = hbm / self.hw.hbm_bw
         t_stream = streamed_bytes / self.hw.host_link_bw
@@ -193,7 +202,7 @@ class PerfModel:
         flops = 2.0 * (self.active_param_bytes / self.dtype_bytes) \
             * prompt_tokens * batch
         # quadratic attention term (head-sharded across the set)
-        n_attn = sum(1 for k in self.cfg.layer_kinds() if k.startswith("attn"))
+        n_attn = self._n_attn
         attn = (2.0 * n_attn * prompt_tokens ** 2 * self.cfg.num_heads
                 * self.cfg.resolved_head_dim * 2 * batch)
         if self.shards > 1:

@@ -54,7 +54,7 @@ class Request:
 
     def tbts(self) -> List[float]:
         ts = self.token_times
-        return [ts[i + 1] - ts[i] for i in range(len(ts) - 1)]
+        return [b - a for a, b in zip(ts, ts[1:])]
 
 
 def percentile(vals, p) -> float:
@@ -108,12 +108,19 @@ class ServingMetrics:
         interference benchmarks report the victim tenant's tail alone)."""
         if model is not None:
             reqs = [r for r in reqs if r.model == model]
-        ttfts = [r.ttft() for r in reqs if r.ttft() is not None]
-        tbts = [t for r in reqs for t in r.tbts()]
+        # one pass: ttft()/tbts() are per-request allocations, and a
+        # million-request replay calls this once per request
+        ttfts, tbts, per_request = [], [], []
+        for r in reqs:
+            tf = r.ttft()
+            bt = r.tbts()
+            if tf is not None:
+                ttfts.append(tf)
+            tbts.extend(bt)
+            per_request.append((tf, max(bt, default=0.0)))
         tokens = sum(len(r.generated) for r in reqs)
         saved = sum(r.prefix_matched_tokens for r in reqs)
         prompt_tokens = sum(r.prompt_len for r in reqs)
-        per_request = [(r.ttft(), max(r.tbts(), default=0.0)) for r in reqs]
         return ServingMetrics(
             p99_ttft=percentile(ttfts, 99),
             p99_tbt=percentile(tbts, 99),

@@ -256,20 +256,27 @@ class RuntimeConfig:
         """Generate the merged workload from every tenant's bound trace
         spec (``TenantSpec.trace``), each rebound to its tenant's name.
         Per-spec RNG streams keep the usual seed-stability contract."""
+        from repro.serving.trace_replay import ReplaySpec
         from repro.serving.traces import (
             DiurnalSpec, TraceSpec, diurnal_trace, make_trace,
         )
-        plain, diurnal = [], []
+        plain, diurnal, replayed = [], [], []
         for name, spec in self.tenants.items():
             if spec.trace is None:
                 continue
-            if not isinstance(spec.trace, (DiurnalSpec, TraceSpec)):
+            if not isinstance(spec.trace,
+                              (DiurnalSpec, TraceSpec, ReplaySpec)):
                 raise TypeError(
                     f"unsupported trace spec for tenant {name!r}: "
                     f"{type(spec.trace).__name__}")
             bound = dataclasses.replace(spec.trace, model=name)
-            (diurnal if isinstance(bound, DiurnalSpec)
-             else plain).append(bound)
-        reqs = make_trace(plain, seed=seed) + diurnal_trace(diurnal, seed=seed)
+            if isinstance(bound, ReplaySpec):
+                replayed.extend(bound.requests(seed=seed))
+            elif isinstance(bound, DiurnalSpec):
+                diurnal.append(bound)
+            else:
+                plain.append(bound)
+        reqs = make_trace(plain, seed=seed) \
+            + diurnal_trace(diurnal, seed=seed) + replayed
         reqs.sort(key=lambda r: r.arrival)
         return reqs

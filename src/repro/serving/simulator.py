@@ -26,6 +26,8 @@ TemporalScheduler / SpatialScheduler objects as the functional engine.
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import math
 import warnings
 from collections import deque
 from typing import Dict, List, Optional, Tuple
@@ -45,8 +47,21 @@ from repro.serving.request import (
 )
 from repro.serving.scheduler import admission_watermark, make_scheduler
 from repro.serving.slo import (
-    SLOSpec, preemption_victim, runtime_tenant_slack,
+    SLOSpec, preemption_victim, request_slack, runtime_tenant_slack,
 )
+
+
+def _discard(lst: list, item) -> None:
+    """Remove ``item`` from ``lst`` by identity. ``list.remove`` compares
+    with ``==``, and the Request dataclass eq walks the field tuple of
+    every earlier element — which dominates finish processing at
+    production-trace scale. rids are unique, so the element ``==`` would
+    find is always ``item`` itself."""
+    for i, x in enumerate(lst):
+        if x is item:
+            del lst[i]
+            return
+    raise ValueError("item not in list")
 
 
 @dataclasses.dataclass
@@ -88,6 +103,20 @@ class SimTenant:
         self._next_vpage = 0
         self._shared: Dict[str, int] = {}   # rid -> tokens served from cache
         self._paths: Dict[str, list] = {}   # rid -> acquired trie path
+        # incremental accounting, maintained at every admit/prefill/decode/
+        # finish/preempt event (integer-exact, so the fast path's O(1)
+        # reads are bit-identical to the reference path's O(batch) scans)
+        self.fast = False
+        self._priv_tokens = 0   # Σ (total_len - shared) over running+prefilling
+        self._ctx_tokens = 0    # Σ total_len over running
+        # fast-path deferral state: decode rounds completed, the shared
+        # per-round token-time timeline, requests admitted since the last
+        # decode round, and the pending finish-event heap
+        self._rounds = 0
+        self._timeline: List[float] = []
+        self._fresh: List[Request] = []
+        self._finish_heap: List[tuple] = []
+        self._admit_seq = 0
 
     def cache_bytes(self) -> int:
         if self.index is None:
@@ -99,6 +128,9 @@ class SimTenant:
         """Device KV bytes: each request's private tokens (suffix + decode)
         plus the deduplicated cached blocks, counted once. Prefilling
         requests count in full — their pages are reserved at admission."""
+        if self.fast:
+            return self._priv_tokens * self.kv_token_bytes \
+                + self.cache_bytes()
         private = sum((r.total_len - self._shared.get(r.rid, 0))
                       * self.kv_token_bytes
                       for r in self.running + self.prefilling)
@@ -144,9 +176,12 @@ class Simulator:
         expert_pin_fraction: float = 0.125,
         shard_devices: int = 1,           # devices in this shard set (SPMD)
         shard_lockstep: bool = True,      # False = naive per-shard drains
+        fast: bool = False,               # O(1)-per-tick hot path (bit-
+                                          # identical; see docs/ARCHITECTURE)
     ):
         assert mode in ("mirage", "vllm", "swap")
         self.mode = mode
+        self.fast = bool(fast)
         self.hw = hw
         self.shard_devices = max(int(shard_devices), 1)
         self.shard_lockstep = shard_lockstep
@@ -167,6 +202,8 @@ class Simulator:
             n: SimTenant(n, tc, hw,
                          prefix_page=prefix_page if prefix_sharing else 0)
             for n, tc in tenants.items()}
+        for t in self.tenants.values():
+            t.fast = self.fast
         page_bytes = 2 << 20
         self.store = MetadataStore(MemoryInfo(
             hbm_bytes=hw.hbm_bytes, page_bytes=page_bytes,
@@ -218,7 +255,17 @@ class Simulator:
         self.now = 0.0
         self._reversion_base = dynamic_reversion
         self._prefill_budget = 0       # per-iteration, shared by tenants
-        self._incoming: deque = deque()
+        # pending arrivals: ONE sorted list + a cursor. The old deque
+        # re-sorted and re-allocated per merge and churned a popleft per
+        # request; the cursor makes per-tick intake an index walk and the
+        # in-order submit an O(new) append (out-of-order submits re-sort
+        # only the unconsumed tail — same stable order merge_arrivals
+        # produces, enforced by tests/test_sim_equivalence.py)
+        self._arrivals: List[Request] = []
+        self._arr_pos = 0
+        # global progress counter for the starvation guard, maintained
+        # incrementally (== the old per-tick O(running) rescan, exactly)
+        self._tok_live = 0
         # tick-loop guard state (hoisted out of the old monolithic run()
         # so the iteration body is one protocol-visible tick())
         self._idle_guard = 0
@@ -245,13 +292,23 @@ class Simulator:
 
     # --------------------------------------------- API (ServingRuntime)
     def submit(self, reqs: List[Request]) -> None:
-        """Enqueue arrivals (append-safe incremental ``merge_arrivals``:
-        the cluster router feeds requests as their times come due)."""
-        from repro.serving.runtime import merge_arrivals
-        self._incoming = merge_arrivals(self._incoming, reqs)
+        """Enqueue arrivals (``merge_arrivals`` semantics over the
+        cursor'd arrival list: the cluster router feeds requests as their
+        times come due, so the in-order path is an O(new) append; an
+        out-of-order add re-sorts only the not-yet-consumed tail)."""
+        reqs = sorted(reqs, key=lambda r: r.arrival)
+        a = self._arrivals
+        if len(a) > self._arr_pos and reqs \
+                and reqs[0].arrival < a[-1].arrival:
+            tail = sorted(a[self._arr_pos:] + reqs,
+                          key=lambda r: r.arrival)
+            del a[self._arr_pos:]
+            a.extend(tail)
+        else:
+            a.extend(reqs)
 
     def busy(self) -> bool:
-        return bool(self._incoming or any(
+        return bool(self._arr_pos < len(self._arrivals) or any(
             t.queue or t.running or t.prefilling
             for t in self.tenants.values()))
 
@@ -270,7 +327,7 @@ class Simulator:
 
     def inflight(self) -> int:
         """Requests submitted but not finished (cluster-router load)."""
-        return len(self._incoming) + sum(
+        return (len(self._arrivals) - self._arr_pos) + sum(
             len(t.queue) + len(t.running) + len(t.prefilling)
             for t in self.tenants.values())
 
@@ -295,11 +352,16 @@ class Simulator:
         seconds (0.0 for pure bookkeeping iterations: starvation-guard
         drops and idle fast-forwards, which move the clock directly)."""
         # starvation guard: a head request that can never fit (tenant
-        # mis-sized for vllm mode) is dropped as failed after a bound
-        tok_now = sum(len(r.generated) for t in self.tenants.values()
-                      for r in t.running) + len(self.finished) \
-            + sum(r.prompt_len - r._prefill_left
-                  for t in self.tenants.values() for r in t.prefilling)
+        # mis-sized for vllm mode) is dropped as failed after a bound.
+        # _tok_live carries the same progress count the old per-tick
+        # rescan computed, maintained at each token event
+        if self.fast:
+            tok_now = self._tok_live
+        else:
+            tok_now = sum(len(r.generated) for t in self.tenants.values()
+                          for r in t.running) + len(self.finished) \
+                + sum(r.prompt_len - r._prefill_left
+                      for t in self.tenants.values() for r in t.prefilling)
         self._no_progress = \
             self._no_progress + 1 if tok_now == self._tokens_done else 0
         self._tokens_done = tok_now
@@ -309,13 +371,18 @@ class Simulator:
                     r = t.queue.popleft()
                     r.finished = True
                     self.finished.append(r)
+                    self._tok_live += 1
             self._no_progress = 0
             return 0.0
-        while self._incoming and self._incoming[0].arrival <= self.now:
-            r = self._incoming.popleft()
+        arr, pos = self._arrivals, self._arr_pos
+        while pos < len(arr) and arr[pos].arrival <= self.now:
+            r = arr[pos]
+            pos += 1
             self.tenants[r.model].queue.append(r)
+        self._arr_pos = pos
         if self._slo_enabled:
-            slacks = self._slo_slack()
+            slacks = self._slo_slack_fast() if self.fast \
+                else self._slo_slack()
             self.store.note_slack(slacks)
             self.scheduler.observe_slack(slacks)
         pending = {n: len(t.queue) for n, t in self.tenants.items()}
@@ -333,8 +400,9 @@ class Simulator:
                 self.now += dt
                 return dt
             # fast-forward to next arrival
-            if self._incoming:
-                self.now = max(self.now, self._incoming[0].arrival)
+            if self._arr_pos < len(self._arrivals):
+                self.now = max(self.now,
+                               self._arrivals[self._arr_pos].arrival)
             self._idle_guard += 1
             return 0.0
         self._idle_guard = 0
@@ -410,6 +478,46 @@ class Simulator:
                     max(r._prefill_left, 1)))
         return out
 
+    def _slo_slack_fast(self) -> Dict[str, float]:
+        """``_slo_slack`` in O(queue-head + fresh + prefilling) per tenant.
+
+        Every running request's slack is ``token_times[-1] + tbt - now -
+        t_next``; the trailing ops are the same for all of them and IEEE
+        add/sub are monotone, so the minimum over the batch equals the
+        expression applied once to the minimum last-token time — which is
+        the tenant timeline's tail for every request that has decoded
+        since admission, leaving only the fresh (just-admitted) requests
+        to scan. Bit-identical to the reference fold by monotonicity."""
+        out = {}
+        for n, t in self.tenants.items():
+            spec = self.slo_specs[n]
+            batch = max(len(t.running), 1)
+            avg_ctx = (t._ctx_tokens / len(t.running)) \
+                if t.running else 512.0
+            t_next = t.perf.next_token_time(batch, avg_ctx)
+            slack = math.inf
+            if t.queue:
+                head = t.queue[0]
+                slack = min(slack, request_slack(
+                    head, spec, self.now,
+                    t.perf.prefill_time(head.prompt_len), t_next))
+            if t.running:
+                last = math.inf
+                if len(t._fresh) < len(t.running):
+                    last = t._timeline[-1]
+                for r in t._fresh:
+                    lt = r.token_times[-1]
+                    if lt < last:
+                        last = lt
+                slack = min(slack,
+                            last + spec.tbt_target - self.now - t_next)
+            for r in t.prefilling:
+                slack = min(slack, request_slack(
+                    r, spec, self.now,
+                    t.perf.prefill_time(max(r._prefill_left, 1)), t_next))
+            out[n] = slack
+        return out
+
     def _capacity(self, t: SimTenant) -> int:
         """Device KV capacity currently available to tenant t."""
         base = t.kv_capacity_base
@@ -474,6 +582,8 @@ class Simulator:
                 r._prefill_left = r.prompt_len - matched
                 r._reload_pending = reload
                 t.prefilling.append(r)
+                self._tok_live += matched
+                t._priv_tokens += r.prompt_len - matched
                 continue
             t.running.append(r)
             tp = t.perf.prefill_time(r.prompt_len - matched,
@@ -483,7 +593,53 @@ class Simulator:
             r.t_first_token = now
             r.generated.append(0)
             r.token_times.append(now)
+            t._priv_tokens += r.prompt_len + 1 - matched
+            self._note_enter_running(t, r)
         return dt
+
+    def _note_enter_running(self, t: SimTenant, r: Request) -> None:
+        """Bookkeeping at the moment a request joins ``t.running`` (its
+        first token was just emitted): progress/context counters, and —
+        fast path — the deferred-materialization anchors (decode round at
+        admission, admission epoch for stale-heap-entry detection) plus
+        the finish-event heap entry. The finish round mirrors the
+        reference check ``len(generated) >= max_new_tokens`` evaluated
+        after each round's append, with the first token pre-counted."""
+        self._tok_live += 1
+        t._ctx_tokens += r.prompt_len + 1
+        if not self.fast:
+            return
+        t._admit_seq += 1
+        r._round0 = t._rounds
+        r._epoch = getattr(r, "_epoch", 0) + 1
+        t._fresh.append(r)
+        heapq.heappush(
+            t._finish_heap,
+            (t._rounds + max(r.max_new_tokens - 1, 1),
+             t._admit_seq, r._epoch, r))
+
+    def _flush_tokens(self, t: SimTenant, r: Request) -> None:
+        """Materialize a fast-path request's deferred decode tokens: every
+        decode round since admission appended one token at the tenant's
+        shared round timestamp, so the per-request lists are exactly the
+        timeline slice from its admission round."""
+        extra = t._rounds - r._round0
+        if extra > 0:
+            r.generated.extend([0] * extra)
+            r.token_times.extend(t._timeline[r._round0:])
+
+    def _finish_fast(self, t: SimTenant, r: Request) -> None:
+        """Fast-path twin of the reference finish branch in ``_decode``."""
+        self._flush_tokens(t, r)
+        r.finished = True
+        _discard(t.running, r)
+        self.finished.append(r)
+        gen = len(r.generated)
+        sh = t._shared.get(r.rid, 0)
+        self._tok_live += 1 - gen
+        t._priv_tokens -= r.total_len - sh
+        t._ctx_tokens -= r.total_len
+        self._retire(t, r)
 
     def _prefill_step(self, t: SimTenant) -> float:
         """One bounded prefill chunk per prefilling request, mirroring the
@@ -508,13 +664,20 @@ class Simulator:
                 r._reload_pending = 0.0
             dt += step
             r._prefill_left -= chunk
+            self._tok_live += chunk
             if r._prefill_left <= 0:
-                t.prefilling.remove(r)
+                _discard(t.prefilling, r)
                 t.running.append(r)
                 now = self.now + dt
                 r.t_first_token = now
                 r.generated.append(0)
                 r.token_times.append(now)
+                # prefilling contributed prompt_len progress tokens and
+                # prompt-matched private tokens; as a running request it
+                # contributes its one generated token and prompt+1 context
+                self._tok_live -= r.prompt_len
+                t._priv_tokens += 1
+                self._note_enter_running(t, r)
         return dt
 
     def _current_plan(self, name: str) -> RemapPlan:
@@ -565,7 +728,8 @@ class Simulator:
         batch = len(t.running)
         if batch == 0:
             return stall
-        avg_ctx = sum(r.total_len for r in t.running) / batch
+        avg_ctx = (t._ctx_tokens / batch) if self.fast \
+            else sum(r.total_len for r in t.running) / batch
         info = self.store.models[t.name]
         plan = self._current_plan(t.name)
         if self.mode == "mirage" and t.name in self._expert:
@@ -592,14 +756,38 @@ class Simulator:
         dt += stall
         self.decode_time_s += dt
         now = self.now + dt
-        for r in list(t.running):
-            r.generated.append(0)
-            r.token_times.append(now)
-            if len(r.generated) >= r.max_new_tokens:
-                r.finished = True
-                t.running.remove(r)
-                self.finished.append(r)
-                self._retire(t, r)
+        self._tok_live += batch
+        t._priv_tokens += batch
+        t._ctx_tokens += batch
+        if self.fast:
+            # one timeline append stands in for the per-request token
+            # appends (deferred to _flush_tokens); finishes come off the
+            # event heap in admission order — the reference's running-list
+            # iteration order — with stale entries (preempted/re-admitted
+            # requests) skipped by their epoch
+            t._timeline.append(now)
+            t._rounds += 1
+            t._fresh.clear()
+            heap = t._finish_heap
+            while heap and heap[0][0] <= t._rounds:
+                _, _, epoch, r = heapq.heappop(heap)
+                if r.finished or r._epoch != epoch:
+                    continue
+                self._finish_fast(t, r)
+        else:
+            for r in list(t.running):
+                r.generated.append(0)
+                r.token_times.append(now)
+                if len(r.generated) >= r.max_new_tokens:
+                    r.finished = True
+                    _discard(t.running, r)
+                    self.finished.append(r)
+                    gen = len(r.generated)
+                    sh = t._shared.get(r.rid, 0)
+                    self._tok_live += 1 - gen
+                    t._priv_tokens -= r.total_len - sh
+                    t._ctx_tokens -= r.total_len
+                    self._retire(t, r)
         return dt
 
     def _decode_expert(self, t: SimTenant, batch: int, avg_ctx: float,
@@ -770,7 +958,22 @@ class Simulator:
         if victim is None:
             return 0.0
         vt = self.tenants[victim.model]
-        vt.running.remove(victim)
+        if self.fast:
+            # materialize the deferred tokens first — the recompute stall
+            # and prompt padding below read generated/total_len — then
+            # invalidate the pending finish-heap entry and fresh slot
+            self._flush_tokens(vt, victim)
+            victim._epoch += 1
+            try:
+                _discard(vt._fresh, victim)
+            except ValueError:
+                pass
+        gen = len(victim.generated)
+        sh = vt._shared.get(victim.rid, 0)
+        self._tok_live -= gen
+        vt._priv_tokens -= victim.total_len - sh
+        vt._ctx_tokens -= victim.total_len
+        _discard(vt.running, victim)
         victim.preemptions += 1
         # recompute: prompt+generated re-prefilled on re-admission (prompt
         # token values preserved so re-admission can re-match its prefix;

@@ -1,0 +1,253 @@
+"""Differential harness: ``Simulator(fast=True)`` is BIT-IDENTICAL to the
+reference path.
+
+The fast path replaces the per-tick O(batch) rescans with incremental
+integer counters, a finish-event heap, deferred token timelines, and an
+arrival cursor (docs/ARCHITECTURE.md "Fast path / reference path"). None
+of those change a single float operation, so every ``ServingMetrics``
+field — and the underlying per-request TTFT/TBT samples — must match the
+reference exactly, not approximately. Any drift is a bug in whichever
+path diverged.
+
+Covered here: the paged/remap/swap mode matrix with both schedulers,
+chunked prefill, prefix sharing, preemption under real KV pressure,
+synchronous plan apply, expert-granular MoE remap, shard sets (lock-step
+and naive), cluster-level ReplicaGroup across host-link classes, and
+hypothesis-random traces (skipped without hypothesis installed — CI has
+it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))
+from hypcompat import given, settings, st  # noqa: E402
+
+from repro.configs.registry import ARCHS
+from repro.serving.hw import GH200, HardwareSpec
+from repro.serving.perf_model import PerfModel
+from repro.serving.request import Request, ServingMetrics
+from repro.serving.simulator import SimTenantConfig, Simulator
+from repro.serving.slo import BEST_EFFORT, LATENCY, SLOSpec
+from repro.serving.traces import TraceSpec, ZipfRouting, make_trace
+
+A, B = "llama3-8b", "h2o-danube-3-4b"
+MOE = "moonshot-v1-16b-a3b"
+
+
+def frac(name: str, kv_gb: float, hw: HardwareSpec = GH200) -> float:
+    pm = PerfModel(ARCHS[name], hw)
+    return (pm.param_bytes + kv_gb * 2**30) / hw.hbm_bytes
+
+
+def assert_metrics_identical(ma: ServingMetrics, mb: ServingMetrics,
+                             label: str = "") -> None:
+    da, db = dataclasses.asdict(ma), dataclasses.asdict(mb)
+    for k in da:
+        va, vb = da[k], db[k]
+        if isinstance(va, float) and isinstance(vb, float) \
+                and math.isnan(va) and math.isnan(vb):
+            continue
+        assert va == vb, f"{label}: {k} diverged: {va!r} != {vb!r}"
+    # the raw samples behind the tails, not just the aggregates
+    assert ma._per_request == mb._per_request, f"{label}: _per_request"
+    assert ma._tbts == mb._tbts, f"{label}: _tbts"
+
+
+def run_both(mk_tenants, mk_trace, **sim_kw):
+    """Run the same scenario on both paths; returns (ref_sim, fast_sim)
+    after asserting aggregate AND per-tier metrics identity."""
+    sims = {}
+    for fast in (False, True):
+        sim = Simulator(mk_tenants(), fast=fast, **sim_kw)
+        sim.run(mk_trace(), max_time=1e6)
+        sims[fast] = sim
+    assert_metrics_identical(sims[False].metrics(), sims[True].metrics())
+    ta, tb = sims[False].tier_metrics(), sims[True].tier_metrics()
+    assert ta.keys() == tb.keys()
+    for tier in ta:
+        assert_metrics_identical(ta[tier], tb[tier], f"tier {tier}")
+    assert sims[False].now == sims[True].now
+    assert len(sims[False].finished) == len(sims[True].finished)
+    return sims[False], sims[True]
+
+
+def two_tenants(kv_a=6.0, kv_b=4.0, slo=False, max_batch=48):
+    ka = dict(slo=SLOSpec(ttft_target=6.0, tbt_target=0.08,
+                          tier=LATENCY)) if slo else {}
+    kb = dict(slo=SLOSpec(ttft_target=30.0, tbt_target=0.5,
+                          tier=BEST_EFFORT)) if slo else {}
+    return {A: SimTenantConfig(ARCHS[A], max_batch, frac(A, kv_a), **ka),
+            B: SimTenantConfig(ARCHS[B], max_batch, frac(B, kv_b), **kb)}
+
+
+def two_trace(rate_a=6.0, rate_b=4.0, dur=12.0, seed=3):
+    return make_trace([TraceSpec(A, "sharegpt", rate_a, duration=dur),
+                       TraceSpec(B, "sharegpt", rate_b, duration=dur)],
+                      seed=seed)
+
+
+# ------------------------------------------------------------ mode matrix
+MATRIX = {
+    "mirage-temporal": (dict(mode="mirage"), dict(), dict()),
+    "mirage-slo": (dict(mode="mirage", scheduler="slo"),
+                   dict(slo=True), dict()),
+    "mirage-sync-spatial": (dict(mode="mirage", incremental_apply=False,
+                                 scheduler="spatial"), dict(), dict()),
+    "vllm-chunked": (dict(mode="vllm", prefill_chunk_tokens=256),
+                     dict(), dict()),
+    "swap-prefix": (dict(mode="swap", prefix_sharing=True),
+                    dict(), dict()),
+    # KV sized barely above the params: admission pressure, preemptions
+    "vllm-pressure": (dict(mode="vllm"), dict(kv_a=0.45, kv_b=0.45),
+                      dict(rate_a=10.0, rate_b=8.0)),
+    "mirage-slo-pressure": (dict(mode="mirage", scheduler="slo"),
+                            dict(kv_a=0.45, kv_b=0.45, slo=True),
+                            dict(rate_a=10.0, rate_b=8.0)),
+}
+
+
+@pytest.mark.parametrize("name", sorted(MATRIX))
+def test_matrix_identical(name):
+    sim_kw, ten_kw, tr_kw = MATRIX[name]
+    ref, fast = run_both(lambda: two_tenants(**ten_kw),
+                         lambda: two_trace(**tr_kw), **sim_kw)
+    assert len(ref.finished) > 0
+
+
+def test_pressure_actually_preempts():
+    """The pressure scenario must exercise the preemption/recompute path,
+    or the matrix silently stops covering it."""
+    sim_kw, ten_kw, tr_kw = MATRIX["vllm-pressure"]
+    ref, fast = run_both(lambda: two_tenants(**ten_kw),
+                         lambda: two_trace(**tr_kw), **sim_kw)
+    assert sum(r.preemptions for r in ref.finished) > 0
+
+
+# ------------------------------------------------------- expert-granular MoE
+def test_expert_granular_identical():
+    cfg = ARCHS[MOE]
+    E, K = cfg.moe.num_experts, cfg.moe.top_k
+
+    def tenants():
+        return {MOE: SimTenantConfig(
+            cfg, 64, frac(MOE, 0.5),
+            slo=SLOSpec(ttft_target=30.0, tbt_target=0.2, tier=LATENCY))}
+
+    def trace():
+        return make_trace([TraceSpec(MOE, "sharegpt", 8.0, duration=6.0)],
+                          seed=1)
+
+    ref, _ = run_both(
+        tenants, trace, mode="mirage", pipeline_cap=False,
+        max_remap_fraction=0.3, expert_granular=True,
+        expert_routing={MOE: ZipfRouting(E, K, zipf_s=1.2)})
+    assert len(ref.finished) > 0
+
+
+# ---------------------------------------------------------------- shard sets
+@pytest.mark.parametrize("lockstep", [True, False])
+def test_shard_set_identical(lockstep):
+    run_both(lambda: two_tenants(kv_a=6.0, kv_b=4.0),
+             two_trace, mode="mirage", shard_devices=4,
+             shard_lockstep=lockstep)
+
+
+# ------------------------------------------------------- cluster / host links
+@pytest.mark.parametrize("link", ["gh200", "pcie5"])
+@pytest.mark.parametrize("n_replicas", [1, 2])
+def test_replica_group_identical(link, n_replicas):
+    """Fleet-level equivalence over the ServingRuntime protocol, across
+    host-link classes (the link is what remap drains ride, so it shifts
+    every mirage timing — both paths must shift identically)."""
+    from repro.cluster import ReplicaGroup
+    from repro.serving import RuntimeConfig, TenantSpec
+
+    hw = GH200 if link == "gh200" else GH200.with_host_link("pcie5")
+
+    def config():
+        return RuntimeConfig(
+            tenants={
+                A: TenantSpec(ARCHS[A], max_batch=32,
+                              mem_fraction=frac(A, 4.0, hw),
+                              slo=SLOSpec(ttft_target=10.0, tbt_target=0.2,
+                                          tier=LATENCY)),
+                B: TenantSpec(ARCHS[B], max_batch=32,
+                              mem_fraction=frac(B, 3.0, hw),
+                              slo=SLOSpec(ttft_target=30.0, tbt_target=0.6,
+                                          tier=BEST_EFFORT)),
+            },
+            mode="mirage", scheduler="slo")
+
+    mets = {}
+    for fast in (False, True):
+        group = ReplicaGroup.from_config(config(), n_replicas,
+                                         fast=fast, hw=hw)
+        group.submit(two_trace(dur=8.0))
+        while group.busy() and group.ticks < 1_000_000:
+            group.tick()
+        mets[fast] = group.metrics()
+    assert_metrics_identical(mets[False], mets[True],
+                             f"{link} x{n_replicas}")
+
+
+# --------------------------------------------------------- random traces
+def _requests_from_shape(shape, seed=0):
+    """Lower a hypothesis-drawn shape into Request objects: per-request
+    (gap_ms, prompt_len, max_new) with round-robin tenant assignment."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    reqs, t = [], 0.0
+    for i, (gap_ms, plen, mnew) in enumerate(shape):
+        t += gap_ms / 1000.0
+        model = (A, B)[i % 2]
+        reqs.append(Request(
+            rid=f"h{i}", model=model,
+            prompt=rng.integers(0, 32000, plen).astype(np.int32),
+            max_new_tokens=mnew, arrival=t))
+    return reqs
+
+
+@given(shape=st.lists(
+    st.tuples(st.integers(min_value=0, max_value=2000),    # gap ms
+              st.integers(min_value=1, max_value=256),     # prompt tokens
+              st.integers(min_value=1, max_value=24)),     # output tokens
+    min_size=1, max_size=40))
+@settings(max_examples=20, deadline=None)
+def test_random_traces_identical(shape):
+    """Property: for ANY arrival/length pattern — including zero gaps
+    (simultaneous arrivals), single-token outputs (immediate finishes),
+    and long prompts against a small batch — both paths agree exactly."""
+    mets = {}
+    for fast in (False, True):
+        sim = Simulator(
+            {A: SimTenantConfig(ARCHS[A], 8, frac(A, 1.0)),
+             B: SimTenantConfig(ARCHS[B], 8, frac(B, 1.0))},
+            mode="mirage", fast=fast)
+        sim.run(_requests_from_shape(shape), max_time=1e6)
+        mets[fast] = sim.metrics()
+    assert_metrics_identical(mets[False], mets[True], "random")
+
+
+@given(shape=st.lists(
+    st.tuples(st.integers(min_value=0, max_value=300),
+              st.integers(min_value=1, max_value=512),
+              st.integers(min_value=1, max_value=16)),
+    min_size=4, max_size=32))
+@settings(max_examples=10, deadline=None)
+def test_random_traces_under_pressure_identical(shape):
+    """Same property with KV sized to force preemption/recompute churn."""
+    mets = {}
+    for fast in (False, True):
+        sim = Simulator(
+            {A: SimTenantConfig(ARCHS[A], 8, frac(A, 0.15)),
+             B: SimTenantConfig(ARCHS[B], 8, frac(B, 0.15))},
+            mode="vllm", fast=fast)
+        sim.run(_requests_from_shape(shape, seed=1), max_time=1e6)
+        mets[fast] = sim.metrics()
+    assert_metrics_identical(mets[False], mets[True], "pressure")

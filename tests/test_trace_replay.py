@@ -1,0 +1,254 @@
+"""Trace-replay loader properties (``repro.serving.trace_replay``).
+
+Pins the determinism contract the module docstring declares: exact
+round-trips, seed-stable down-sampling that preserves record identity,
+arrival-scaling invariants, and the never-silent malformed-row policy.
+The committed sample slices under ``benchmarks/traces/`` are parsed here
+too, so the files the fig25 benchmark replays can never rot.
+"""
+from __future__ import annotations
+
+import sys
+import warnings
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))
+from hypcompat import given, settings, st  # noqa: E402
+
+from repro.serving.trace_replay import (
+    ReplaySpec, TraceRecord, downsample_indices, format_azure_csv,
+    format_burstgpt_csv, load_trace, parse_azure_csv, parse_burstgpt_csv,
+    records_from_requests, replay_trace, sniff_format, synth_records,
+)
+
+TRACES_DIR = Path(__file__).parent.parent / "benchmarks" / "traces"
+
+
+# ------------------------------------------------------------ format sniffing
+def test_sniff_format():
+    assert sniff_format("TIMESTAMP,ContextTokens,GeneratedTokens") == "azure"
+    assert sniff_format("timestamp , contexttokens,generatedtokens,extra") \
+        == "azure"
+    assert sniff_format("Timestamp,Model,Request tokens,Response tokens,"
+                        "Total tokens,Log Type") == "burstgpt"
+    with pytest.raises(ValueError, match="unrecognized trace header"):
+        sniff_format("a,b,c")
+
+
+def test_committed_samples_parse():
+    """The committed slices stay loadable and non-trivial."""
+    for name, fmt, n in (("azure_llm_sample.csv", "azure", 400),
+                         ("burstgpt_sample.csv", "burstgpt", 400)):
+        records, sniffed = load_trace(TRACES_DIR / name)
+        assert sniffed == fmt
+        assert len(records) == n
+        assert records[0].arrival == 0.0
+        assert all(records[i].arrival <= records[i + 1].arrival
+                   for i in range(len(records) - 1))
+        assert all(r.prompt_tokens > 0 and r.output_tokens > 0
+                   for r in records)
+    burst, _ = load_trace(TRACES_DIR / "burstgpt_sample.csv")
+    assert {r.source_model for r in burst} == {"ChatGPT", "GPT-4"}
+
+
+def test_samples_regenerate_identically(tmp_path):
+    """write_sample_traces is deterministic: same seed -> same bytes as
+    the committed files (the regeneration path can't drift silently)."""
+    from repro.serving.trace_replay import write_sample_traces
+    paths = write_sample_traces(tmp_path)
+    for p in paths:
+        committed = (TRACES_DIR / Path(p).name).read_bytes()
+        assert Path(p).read_bytes() == committed
+
+
+# ----------------------------------------------------------------- round-trip
+def test_burstgpt_roundtrip_exact():
+    """records -> CSV -> records is EXACT for BurstGPT (integer seconds)."""
+    recs = synth_records(200, seed=3, models=("ChatGPT", "GPT-4"))
+    # burstgpt stamps are integer seconds: snap arrivals first so the
+    # format itself is lossless, then the parse must be exact
+    snapped = [TraceRecord(float(round(r.arrival)), r.prompt_tokens,
+                           r.output_tokens, r.source_model) for r in recs]
+    back = parse_burstgpt_csv(format_burstgpt_csv(snapped).splitlines())
+    t0 = min(r.arrival for r in snapped)
+    expect = sorted([TraceRecord(r.arrival - t0, r.prompt_tokens,
+                                 r.output_tokens, r.source_model)
+                     for r in snapped], key=lambda r: r.arrival)
+    assert back == expect
+
+
+def test_azure_roundtrip_tolerance():
+    """Azure stamps parse at microsecond resolution; the round-trip is
+    exact on token counts and order, arrivals within 2 us (one tick of
+    loss on the stamp itself plus one on the t=0 rebase anchor)."""
+    recs = synth_records(200, seed=4)
+    back = parse_azure_csv(format_azure_csv(recs).splitlines())
+    assert len(back) == len(recs)
+    assert [(r.prompt_tokens, r.output_tokens) for r in back] \
+        == [(r.prompt_tokens, r.output_tokens) for r in recs]
+    t0 = recs[0].arrival  # parse rebases to t=0
+    for a, b in zip(recs, back):
+        assert abs((a.arrival - t0) - b.arrival) < 2e-6
+
+
+def test_requests_roundtrip():
+    """records -> Requests -> records preserves arrivals, counts, mapping."""
+    recs = synth_records(120, seed=5)
+    reqs = replay_trace(recs, "tenant-a", seed=9)
+    back = records_from_requests(reqs)
+    assert [r.arrival for r in back] == [r.arrival for r in recs]
+    assert [r.prompt_tokens for r in back] == [r.prompt_tokens for r in recs]
+    assert [r.output_tokens for r in back] == [r.output_tokens for r in recs]
+    assert all(r.source_model == "tenant-a" for r in back)
+
+
+# ------------------------------------------------------------------ lowering
+def test_time_scale_scales_arrivals_only():
+    recs = synth_records(60, seed=6)
+    base = replay_trace(recs, "t", seed=0)
+    fast = replay_trace(recs, "t", time_scale=0.25, seed=0)
+    assert [r.rid for r in fast] == [r.rid for r in base]
+    for a, b in zip(base, fast):
+        assert b.arrival == a.arrival * 0.25
+        assert np.array_equal(b.prompt, a.prompt)
+        assert b.max_new_tokens == a.max_new_tokens
+    with pytest.raises(ValueError, match="time_scale"):
+        replay_trace(recs, "t", time_scale=0.0)
+
+
+def test_downsample_seed_stable_and_identity_preserving():
+    recs = synth_records(300, seed=7)
+    full = {r.rid: r for r in replay_trace(recs, "t", seed=2)}
+    s1 = replay_trace(recs, "t", max_requests=50, seed=2)
+    s2 = replay_trace(recs, "t", max_requests=50, seed=2)
+    s3 = replay_trace(recs, "t", max_requests=50, seed=3)
+    assert [r.rid for r in s1] == [r.rid for r in s2]          # seed-stable
+    assert [r.rid for r in s1] != [r.rid for r in s3]          # seed-keyed
+    assert len(s1) == 50
+    for r in s1:  # a sampled record keeps its full-trace identity
+        assert np.array_equal(r.prompt, full[r.rid].prompt)
+        assert r.arrival == full[r.rid].arrival
+    # identity when the trace already fits
+    assert len(replay_trace(recs, "t", max_requests=300, seed=2)) == 300
+    idx = downsample_indices(10, 0, seed=1)
+    assert np.array_equal(idx, np.arange(10))
+
+
+def test_model_map_forms():
+    recs = synth_records(100, seed=8, models=("ChatGPT", "GPT-4"),
+                         model_weights=(0.5, 0.5))
+    # str: everything to one tenant
+    assert {r.model for r in replay_trace(recs, "solo")} == {"solo"}
+    # dict: by source label, '*' fallback
+    by_label = replay_trace(recs, {"ChatGPT": "a", "*": "b"})
+    assert {r.model for r in by_label} == {"a", "b"}
+    assert len(by_label) == len(recs)
+    # dict without fallback: unmapped labels drop WITH a warning
+    with pytest.warns(RuntimeWarning, match="no tenant mapping"):
+        only_gpt4 = replay_trace(recs, {"GPT-4": "x"})
+    assert {r.model for r in only_gpt4} == {"x"}
+    assert 0 < len(only_gpt4) < len(recs)
+    # sequence: hash-assignment is seed-stable and sampling-independent
+    h1 = replay_trace(recs, ["p", "q"], seed=4)
+    h2 = replay_trace(recs, ["p", "q"], seed=4, max_requests=30)
+    assign = {r.rid: r.model for r in h1}
+    assert all(assign[r.rid] == r.model for r in h2)
+    # nothing mapped at all -> error, not empty list
+    with pytest.raises(ValueError, match="no records mapped"):
+        with pytest.warns(RuntimeWarning):
+            replay_trace(recs, {"nonexistent": "x"})
+
+
+def test_token_caps_clamp_with_warning():
+    recs = [TraceRecord(0.0, 100_000, 9_000), TraceRecord(1.0, 64, 16)]
+    with pytest.warns(RuntimeWarning, match="clamped token counts of 1"):
+        reqs = replay_trace(recs, "t", max_prompt_tokens=4096,
+                            max_output_tokens=1024)
+    assert reqs[0].prompt_len == 4096
+    assert reqs[0].max_new_tokens == 1024
+    assert reqs[1].prompt_len == 64
+
+
+# ------------------------------------------------------- malformed handling
+def test_malformed_rows_warn_never_silent():
+    lines = ["TIMESTAMP,ContextTokens,GeneratedTokens",
+             "2024-05-10 00:00:00.0000000,100,10",
+             "not-a-timestamp,100,10",
+             "2024-05-10 00:00:01.0000000,-5,10",     # non-positive prompt
+             "2024-05-10 00:00:02.0000000,100,0",     # non-positive output
+             "2024-05-10 00:00:03.0000000,100",       # short row
+             "2024-05-10 00:00:04.0000000,200,20"]
+    with pytest.warns(RuntimeWarning, match=r"skipped 4 malformed"):
+        records = parse_azure_csv(lines)
+    assert len(records) == 2
+
+    # a fully-malformed file raises — it can never quietly yield []
+    with pytest.raises(ValueError, match="no valid azure rows"):
+        parse_azure_csv(["TIMESTAMP,ContextTokens,GeneratedTokens",
+                         "x,y,z"])
+    with pytest.raises(ValueError, match="empty trace file"):
+        parse_azure_csv([])
+
+
+def test_clean_files_do_not_warn():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        load_trace(TRACES_DIR / "azure_llm_sample.csv")
+        load_trace(TRACES_DIR / "burstgpt_sample.csv")
+
+
+# ------------------------------------------------------------ spec wiring
+def test_replay_spec_binds_into_runtime_config():
+    from repro.configs.registry import ARCHS
+    from repro.serving import RuntimeConfig, TenantSpec
+
+    spec = ReplaySpec(model="ignored", path=str(
+        TRACES_DIR / "azure_llm_sample.csv"), time_scale=0.5,
+        max_requests=40)
+    cfg = RuntimeConfig(tenants={
+        "llama3-8b": TenantSpec(ARCHS["llama3-8b"], trace=spec)})
+    reqs = cfg.trace(seed=0)
+    assert len(reqs) == 40
+    # the trace binds to the TENANT name, not the spec's model field
+    assert {r.model for r in reqs} == {"llama3-8b"}
+    again = cfg.trace(seed=0)                   # seed-stable
+    assert [r.rid for r in again] == [r.rid for r in reqs]
+    assert [r.arrival for r in again] == [r.arrival for r in reqs]
+    with pytest.raises(ValueError, match="needs path or records"):
+        ReplaySpec(model="x").requests()
+
+
+def test_synth_records_deterministic():
+    a = synth_records(50, seed=12)
+    b = synth_records(50, seed=12)
+    assert a == b
+    assert a != synth_records(50, seed=13)
+    assert all(r.arrival <= s.arrival for r, s in zip(a, a[1:]))
+
+
+# ---------------------------------------------------------- property tests
+@given(n=st.integers(min_value=1, max_value=200),
+       k=st.integers(min_value=0, max_value=250),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_downsample_properties(n, k, seed):
+    idx = downsample_indices(n, k, seed)
+    assert len(idx) == (n if k <= 0 or n <= k else k)
+    assert len(set(idx.tolist())) == len(idx)                 # no duplicates
+    assert np.all(np.diff(idx) > 0) or len(idx) <= 1          # sorted
+    assert np.array_equal(idx, downsample_indices(n, k, seed))
+
+
+@given(scale=st.floats(min_value=1e-3, max_value=1e3,
+                       allow_nan=False, allow_infinity=False),
+       seed=st.integers(min_value=0, max_value=1000))
+@settings(max_examples=25, deadline=None)
+def test_replay_order_invariant_under_scaling(scale, seed):
+    recs = synth_records(40, seed=seed)
+    reqs = replay_trace(recs, "t", time_scale=scale, seed=seed)
+    assert [r.rid for r in reqs] \
+        == [r.rid for r in replay_trace(recs, "t", seed=seed)]
+    assert all(a.arrival <= b.arrival for a, b in zip(reqs, reqs[1:]))

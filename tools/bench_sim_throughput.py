@@ -1,0 +1,167 @@
+"""Simulator hot-path throughput guard.
+
+Replays a fixed 50k-request synthetic fixture (Azure-schema statistics:
+bursty arrivals, lognormal token lengths) through the reference and the
+``fast=True`` simulator paths, asserts the two produce IDENTICAL
+``ServingMetrics``, and reports simulated-requests/sec for each. The
+timed region is the tick loop only — metrics aggregation runs identically
+in both paths and is checked, not timed.
+
+Modes:
+
+  python tools/bench_sim_throughput.py                 # measure + print
+  python tools/bench_sim_throughput.py --save          # + write baseline
+  python tools/bench_sim_throughput.py --check         # CI guard
+
+``--check`` fails (exit 1) when EITHER
+  * the fast path is not at least as fast as the reference path, or
+  * a baseline JSON exists and the fast path has regressed more than
+    20% below its recorded requests/sec.
+Machine-speed drift makes absolute req/s incomparable across hosts, so
+the regression gate is advisory-by-default: it engages only against a
+baseline produced on the same host (``--save``), while the fast>=ref
+ratio gate is host-independent and always enforced.
+
+Results (including the fast/reference ratio the acceptance criterion
+tracks) are also folded into ``benchmarks/BENCH_trace_replay.json`` by
+``fig25_trace_replay``, which imports :func:`measure` from here.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                ".."))
+
+BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "bench_sim_throughput_baseline.json")
+N_REQUESTS = 50_000
+SEED = 7
+MAX_REGRESSION = 0.20
+
+
+def fixture(n: int = N_REQUESTS):
+    """The fixed replay fixture: two tenants with SLO tiers on GH200,
+    saturating burst arrivals — a full standing batch is exactly the
+    regime the per-tick rescans of the reference path scale with."""
+    from benchmarks.common import frac
+    from repro.configs.registry import ARCHS
+    from repro.serving.simulator import SimTenantConfig
+    from repro.serving.slo import SLOSpec
+    from repro.serving.trace_replay import synth_records
+
+    A, B = "llama3-8b", "h2o-danube-3-4b"
+    records = synth_records(n, seed=SEED, rate=300.0,
+                            mean_prompt=512.0, mean_output=256.0)
+    tenants = {
+        A: SimTenantConfig(ARCHS[A], 256, frac(A, 24.0),
+                           slo=SLOSpec(ttft_target=20.0, tbt_target=0.4,
+                                       tier="latency")),
+        B: SimTenantConfig(ARCHS[B], 256, frac(B, 16.0),
+                           slo=SLOSpec(ttft_target=60.0, tbt_target=1.0,
+                                       tier="best_effort")),
+    }
+    return records, tenants, [A, B]
+
+
+def _metrics_mismatch(ma, mb):
+    da, db = dataclasses.asdict(ma), dataclasses.asdict(mb)
+    for k in da:
+        va, vb = da[k], db[k]
+        if isinstance(va, float) and isinstance(vb, float) \
+                and math.isnan(va) and math.isnan(vb):
+            continue
+        if va != vb:
+            return k
+    return None
+
+
+def measure(n: int = N_REQUESTS, mode: str = "vllm",
+            scheduler: str = "slo"):
+    """Run the fixture through both paths; returns a result dict with
+    per-path sim-loop wall seconds / req/s and the speedup ratio.
+    Raises AssertionError on any metrics divergence."""
+    from repro.serving.simulator import Simulator
+    from repro.serving.trace_replay import replay_trace
+
+    records, _, models = fixture(n)
+    out = {"n_requests": n, "mode": mode, "scheduler": scheduler}
+    mets = {}
+    for fast in (False, True):
+        _, tenants, _ = fixture(n)   # fresh tenant state per run
+        reqs = replay_trace(records, models, seed=SEED)
+        sim = Simulator(tenants, mode=mode, scheduler=scheduler, fast=fast)
+        sim.submit(reqs)
+        t0 = time.perf_counter()
+        while sim.busy():
+            if sim.now > 1e9 or sim._idle_guard > 2_000_000:
+                break
+            sim.tick()
+        wall = time.perf_counter() - t0
+        mets[fast] = sim.metrics()
+        key = "fast" if fast else "reference"
+        out[key] = {"sim_wall_s": wall,
+                    "requests_per_s": len(sim.finished) / wall,
+                    "finished": len(sim.finished),
+                    "unfinished": sim.inflight()}
+    bad = _metrics_mismatch(mets[False], mets[True])
+    assert bad is None, f"fast path diverged from reference on {bad!r}"
+    assert mets[False]._per_request == mets[True]._per_request
+    assert mets[False]._tbts == mets[True]._tbts
+    out["speedup"] = (out["fast"]["requests_per_s"]
+                      / out["reference"]["requests_per_s"])
+    out["p99_tbt_s"] = mets[True].p99_tbt
+    out["p99_ttft_s"] = mets[True].p99_ttft
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("-n", type=int, default=N_REQUESTS,
+                    help="fixture size (default 50000)")
+    ap.add_argument("--save", action="store_true",
+                    help="write the result as the regression baseline")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 on fast<ref or >20%% baseline regression")
+    args = ap.parse_args()
+
+    res = measure(args.n)
+    ref, fast = res["reference"], res["fast"]
+    print(f"reference: {ref['sim_wall_s']:8.2f}s "
+          f"{ref['requests_per_s']:9.1f} req/s")
+    print(f"fast:      {fast['sim_wall_s']:8.2f}s "
+          f"{fast['requests_per_s']:9.1f} req/s")
+    print(f"speedup:   {res['speedup']:.2f}x   (metrics identical)")
+
+    ok = True
+    if args.check and res["speedup"] < 1.0:
+        print(f"FAIL: fast path ({fast['requests_per_s']:.1f} req/s) is "
+              f"slower than reference ({ref['requests_per_s']:.1f} req/s)")
+        ok = False
+    if args.check and os.path.exists(BASELINE) and args.n == N_REQUESTS:
+        with open(BASELINE) as f:
+            base = json.load(f)
+        floor = base["fast"]["requests_per_s"] * (1.0 - MAX_REGRESSION)
+        print(f"baseline:  {base['fast']['requests_per_s']:9.1f} req/s "
+              f"(floor {floor:.1f})")
+        if fast["requests_per_s"] < floor:
+            print(f"FAIL: fast path regressed >{MAX_REGRESSION:.0%} below "
+                  f"baseline")
+            ok = False
+    if args.save:
+        with open(BASELINE, "w") as f:
+            json.dump(res, f, indent=2)
+        print(f"# wrote {BASELINE}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
