@@ -1031,9 +1031,154 @@ def fig25_trace_replay(out_json: str = None, guard_requests: int = 50_000):
     return rows
 
 
+# --------------------------- fleet-wide content-addressed prefix cache
+def fig26_fleet_prefix(out_json: str = None):
+    """Fleet-wide content-addressed prefix cache on multi-turn traffic:
+    {1,2,4,8} prefix-affinity replicas per ``hw.HOST_LINKS`` class, fleet
+    cache off vs on. With the fleet index, a session rehashed to a cold
+    replica imports the warm replica's prefix KV over the host link (or
+    charges it recomputed when the analytic decision says compute is
+    cheaper), so the FLEET hit rate stays flat as the per-replica hit
+    rate decays with replica count. Asserts the 1-replica fleet run is
+    byte-identical to the plain run and that the fast simulator path is
+    bit-identical with the fleet cache on. Writes
+    BENCH_fleet_prefix.json."""
+    import dataclasses as dc
+    import json
+    import math
+    import os
+
+    from benchmarks.common import frac
+    from repro.cluster import FleetPrefixCache, ReplicaGroup, Router
+    from repro.configs import ARCHS
+    from repro.serving import RuntimeConfig, TenantSpec
+    from repro.serving.traces import ConversationSpec, multi_turn_trace
+
+    model = "llama3-8b"
+
+    def config(hw):
+        return RuntimeConfig(
+            tenants={model: TenantSpec(
+                ARCHS[model], max_batch=8,
+                mem_fraction=frac(model, 1.0, hw))},
+            mode="mirage", scheduler="temporal", prefix_sharing=True)
+
+    def trace():
+        return multi_turn_trace(
+            [ConversationSpec(model, num_sessions=24, turns=5,
+                              system_prompt_len=512, user_len=64,
+                              assistant_len=128, max_new_tokens=64,
+                              think_time=2.0, session_rate=2.0)], seed=3)
+
+    def run_group(hw, n, fleet, fast=True):
+        fc = FleetPrefixCache(page_size=32) if fleet else None
+        group = ReplicaGroup.from_config(
+            config(hw), n, backend="sim", router=Router("prefix_affinity"),
+            fleet_cache=fc, hw=hw, fast=fast)
+        group.run(trace())
+        return group.metrics(), fc
+
+    def metrics_equal(a, b, skip_fleet=False):
+        da, db = dc.asdict(a), dc.asdict(b)
+        for k in da:
+            if skip_fleet and ("fleet" in k or "prefix_fetch" in k
+                               or k.endswith("prefix_tokens")):
+                continue
+            if isinstance(da[k], float) and math.isnan(da[k]) \
+                    and math.isnan(db[k]):
+                continue
+            assert da[k] == db[k], f"diverged on {k}"
+
+    rows, record = [], []
+    for link in ("nvlink_c2c", "pcie5", "pcie4"):
+        hw = GH200.with_host_link(link)
+        for n in (1, 2, 4, 8):
+            for fleet in (False, True):
+                met, fc = run_group(hw, n, fleet)
+                rows.append(["fig26", link, n, "on" if fleet else "off",
+                             met.mean_ttft, met.p99_ttft,
+                             met.prefix_hit_rate, met.fleet_hit_rate,
+                             met.transferred_prefix_tokens,
+                             met.recomputed_prefix_tokens,
+                             met.prefix_fetch_bytes])
+                record.append({
+                    "host_link": link, "replicas": n, "fleet": fleet,
+                    "mean_ttft_s": met.mean_ttft,
+                    "p99_ttft_s": met.p99_ttft,
+                    "prefix_hit_rate": met.prefix_hit_rate,
+                    "fleet_hit_rate": met.fleet_hit_rate,
+                    "transferred_prefix_tokens":
+                        met.transferred_prefix_tokens,
+                    "recomputed_prefix_tokens":
+                        met.recomputed_prefix_tokens,
+                    "prefix_fetch_bytes": met.prefix_fetch_bytes,
+                    "dedup_coroutes": fc.stats.dedup_coroutes if fc else 0,
+                })
+    emit(rows, ["bench", "link", "replicas", "fleet", "mean_ttft_s",
+                "p99_ttft_s", "hit_rate", "fleet_hit_rate", "xfer_tokens",
+                "recomputed_tokens", "fetch_bytes"])
+
+    # claims: fleet hit rate non-decreasing in replica count (vs the
+    # decaying per-replica rate), TTFT at 8 replicas no worse than the
+    # fleet-off baseline, per link class
+    claims = {}
+    for link in ("nvlink_c2c", "pcie5", "pcie4"):
+        on = {r["replicas"]: r for r in record
+              if r["host_link"] == link and r["fleet"]}
+        off = {r["replicas"]: r for r in record
+               if r["host_link"] == link and not r["fleet"]}
+        fleet_hits = [on[n]["fleet_hit_rate"] for n in (1, 2, 4, 8)]
+        claims[link] = {
+            "fleet_hit_rates_1_2_4_8": fleet_hits,
+            "fleet_hit_non_decreasing": all(
+                b >= a - 1e-12 for a, b in zip(fleet_hits, fleet_hits[1:])),
+            "per_replica_hit_1_vs_8":
+                [off[1]["prefix_hit_rate"], off[8]["prefix_hit_rate"]],
+            "mean_ttft_8_fleet_vs_base":
+                [on[8]["mean_ttft_s"], off[8]["mean_ttft_s"]],
+            "ttft_8_improved":
+                on[8]["mean_ttft_s"] <= off[8]["mean_ttft_s"],
+        }
+    assert all(c["fleet_hit_non_decreasing"] for c in claims.values())
+    assert claims["nvlink_c2c"]["ttft_8_improved"]
+
+    # 1-replica transparency: the fleet cache must be invisible (no
+    # import is possible when the only warm holder is the target itself)
+    hw = GH200.with_host_link("pcie5")
+    base, _ = run_group(hw, 1, False)
+    one, _ = run_group(hw, 1, True)
+    metrics_equal(base, one, skip_fleet=True)
+
+    # fast-path differential with the fleet cache on: same fleet state,
+    # same metrics, bit for bit
+    ref, _ = run_group(hw, 4, True, fast=False)
+    fst, _ = run_group(hw, 4, True, fast=True)
+    metrics_equal(ref, fst)
+
+    path = out_json or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)),
+        "BENCH_fleet_prefix.json")
+    with open(path, "w") as f:
+        json.dump({
+            "bench": "fig26_fleet_prefix",
+            "workload": "multi_turn 24 sessions x5 turns (512-token "
+                        "system prompt), prefix_affinity router, GH200, "
+                        "replicas x host links x fleet on/off",
+            "rows": record,
+            "claims": claims,
+            "headline": "fleet hit rate flat in replica count while the "
+                        "per-replica rate decays; 8-replica mean TTFT "
+                        "improves with cross-replica prefix fetches; "
+                        "1-replica run byte-identical with the cache on; "
+                        "fast sim path bit-identical to reference",
+        }, f, indent=2)
+    print(f"# wrote {path}")
+    return rows
+
+
 ALL = [fig8_temporal, fig9_varied_rates, fig10_varied_inputs, fig11_mru_lru,
        fig12_spatial, fig13_strict_isolation, fig14_swap_vs_remap,
        fig15_layer_selection, fig16_dynamic_reversion, fig17_remap_cap,
        fig18_prefix_sharing, fig19_chunked_prefill, fig20_slo_tiers,
        fig21_async_pipeline, fig22_multi_replica, fig23_expert_remap,
-       fig24_shard_sets, fig25_trace_replay]
+       fig24_shard_sets, fig25_trace_replay, fig26_fleet_prefix]

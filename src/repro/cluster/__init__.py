@@ -1,4 +1,7 @@
 """Multi-replica cluster layer over the ``ServingRuntime`` protocol."""
+from repro.cluster.fleet_prefix_cache import (
+    FleetMatch, FleetPrefixCache, FleetStats,
+)
 from repro.cluster.policy import CoordinatedRemapPolicy
 from repro.cluster.replica_group import ReplicaGroup
 from repro.cluster.router import (

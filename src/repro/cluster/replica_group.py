@@ -24,6 +24,7 @@ import warnings
 from collections import deque
 from typing import Dict, List, Optional, Sequence
 
+from repro.cluster.fleet_prefix_cache import FleetPrefixCache
 from repro.cluster.policy import CoordinatedRemapPolicy
 from repro.cluster.router import Router
 from repro.cluster.shard_set import ShardSet
@@ -36,7 +37,8 @@ from repro.serving.runtime import (
 class ReplicaGroup:
     def __init__(self, replicas: Sequence[ServingRuntime],
                  router: Optional[Router] = None,
-                 remap_policy: Optional[CoordinatedRemapPolicy] = None):
+                 remap_policy: Optional[CoordinatedRemapPolicy] = None,
+                 fleet_cache: Optional[FleetPrefixCache] = None):
         if not replicas:
             raise ValueError("ReplicaGroup needs at least one replica")
         self.replicas: List[ServingRuntime] = list(replicas)
@@ -48,12 +50,27 @@ class ReplicaGroup:
         # how often >= 2 were draining at once (what coordination removes)
         self.drain_ticks = 0
         self.simultaneous_drain_ticks = 0
+        # fleet-wide content-addressed prefix cache: every replica's
+        # publishes feed the shared index; dispatch consults it and cold
+        # replicas import warm spans over the host link when the
+        # transfer-vs-recompute call favors the fetch
+        self.fleet_cache = fleet_cache
+        # pre-flight batch dedup: leading-block chain key -> replica that
+        # a same-round arrival with that key was steered to (reset per
+        # dispatch round)
+        self._round_prefix: Dict[str, int] = {}
+        if fleet_cache is not None:
+            for i, rt in enumerate(self.replicas):
+                rt.set_prefix_listener(
+                    lambda model, tokens, now, _i=i:
+                    fleet_cache.publish(_i, model, tokens, now))
 
     @classmethod
     def from_config(cls, config: RuntimeConfig, n_replicas: int, *,
                     backend: str = "sim",
                     router: Optional[Router] = None,
                     coordinate: bool = False,
+                    fleet_cache: Optional[FleetPrefixCache] = None,
                     **kw) -> "ReplicaGroup":
         """Build N identical serving units from one declare-once config.
         When the config declares shard degrees (``TenantSpec.shards > 1``)
@@ -71,7 +88,8 @@ class ReplicaGroup:
             units = [config.build(backend, **kw) for _ in range(n_replicas)]
         return cls(units, router=router,
                    remap_policy=CoordinatedRemapPolicy() if coordinate
-                   else None)
+                   else None,
+                   fleet_cache=fleet_cache)
 
     # --------------------------------------------------------------- driving
     def submit(self, reqs: List[Request]) -> None:
@@ -117,15 +135,80 @@ class ReplicaGroup:
             return
         horizons = {i: rt.horizon()
                     for i, rt in enumerate(self.replicas) if rt.busy()}
+        self._round_prefix.clear()
         while self._incoming:
             horizon = min(horizons.values()) if horizons \
                 else self._incoming[0].arrival
             if self._incoming[0].arrival > horizon:
                 break
             r = self._incoming.popleft()
-            i = self.router.route(r, self.replicas)
+            i = self.router.route(r, self.replicas) \
+                if self.fleet_cache is None else self._route_fleet(r)
             self.replicas[i].submit([r])
             horizons[i] = self.replicas[i].horizon()
+
+    def _route_fleet(self, r: Request) -> int:
+        """Fleet-cache-aware dispatch of one request:
+
+        1. look up the prompt's chained content hashes in the fleet index
+           (per-replica warm depths);
+        2. pre-flight batch dedup — an arrival sharing its leading block
+           with one routed earlier in this SAME round is steered to that
+           leader's replica, so the shared block prefills once and the
+           follower CoW-forks it;
+        3. route with the warm set as the router's ``prefer`` hint
+           (drain-aware: the router never picks a draining holder);
+        4. if the pick landed cold, re-verify the best warm holder's span
+           with a non-mutating probe (the fleet index may be stale) and
+           either import the span's KV over the host link or charge it as
+           recomputed, per the analytic transfer-vs-recompute decision.
+        """
+        fc = self.fleet_cache
+        m = fc.match(r.model, r.prompt, now=r.arrival,
+                     max_tokens=r.prompt_len - 1)
+        prefer = set(m.depths)
+        bkey = fc.batch_key(r.model, r.prompt)
+        mate = self._round_prefix.get(bkey) if bkey is not None else None
+        if mate is not None and not prefer \
+                and not self.replicas[mate].draining():
+            # co-route regardless of router policy: following the leader
+            # is the whole point (N identical prefills otherwise), so this
+            # is a hard assignment, not a hint — but never to a draining
+            # leader (drain-aware fallback: the router re-picks below)
+            fc.stats.dedup_coroutes += 1
+            self.router.assignments[r.rid] = mate
+            i = mate
+        else:
+            i = self.router.route(r, self.replicas, prefer=prefer or None)
+        if bkey is not None:
+            self._round_prefix.setdefault(bkey, i)
+        holder, span = m.best_holder(exclude=i)
+        local = self.replicas[i].prefix_probe(r.model, r.prompt) \
+            if span else m.depths.get(i, 0)
+        if holder < 0 or span <= local:
+            return i
+        # never fetch more than the holder still verifiably has, nor more
+        # than admission could use (full blocks below prompt_len)
+        span = min(span,
+                   self.replicas[holder].prefix_probe(r.model, r.prompt))
+        gain = span - local
+        if gain <= 0:
+            return i
+        nbytes, t_fetch, t_rec = self.replicas[i].prefix_costs(
+            r.model, gain, r.prompt_len)
+        if t_fetch < t_rec:
+            kv = self.replicas[holder].export_prefix(r.model, r.prompt,
+                                                     span)
+            got = self.replicas[i].import_prefix(r.model, r.prompt, span,
+                                                 kv=kv)
+            if got:
+                fc.stats.transfers += 1
+                fc.stats.transferred_tokens += got
+                fc.stats.fetch_bytes += got * (nbytes // max(gain, 1))
+                fc.publish(i, r.model, r.prompt[:span], r.arrival)
+        else:
+            fc.stats.recomputed_tokens += gain
+        return i
 
     def run(self, requests: Optional[List[Request]] = None,
             max_ticks: int = 10_000_000) -> ServingMetrics:
@@ -157,7 +240,18 @@ class ReplicaGroup:
         return total
 
     def metrics(self) -> ServingMetrics:
-        return ServingMetrics.merge([rt.metrics() for rt in self.replicas])
+        met = ServingMetrics.merge([rt.metrics() for rt in self.replicas])
+        if self.fleet_cache is not None:
+            # fleet counters live on the shared index, not on any replica:
+            # overwrite the merged zeros with the group-level truth
+            s = self.fleet_cache.stats
+            met.fleet_hit_rate = s.hit_rate
+            met.transferred_prefix_tokens = s.transferred_tokens
+            met.recomputed_prefix_tokens = s.recomputed_tokens
+            met.prefix_fetch_bytes = s.fetch_bytes
+            met._fleet_matched_tokens = s.matched_tokens
+            met._fleet_lookup_tokens = s.lookup_tokens
+        return met
 
     def tier_metrics(self) -> Dict[str, ServingMetrics]:
         """Fleet tails per SLO tier: the union of every replica's tiers,

@@ -63,20 +63,41 @@ class Router:
         if self.policy not in POLICIES:
             raise ValueError(f"unknown router policy {self.policy!r}")
 
-    def route(self, req: Request, replicas: Sequence) -> int:
-        """Pick the replica for ``req`` and record the assignment."""
+    def route(self, req: Request, replicas: Sequence,
+              prefer=None) -> int:
+        """Pick the replica for ``req`` and record the assignment.
+        ``prefer`` is an optional set of replica indices the fleet prefix
+        cache reports as warm for this prompt — consulted by the
+        ``prefix_affinity`` policy before assignment (other policies
+        ignore the hint; the fetch path still serves them after routing).
+        Draining replicas stay excluded: a warm-but-draining holder loses
+        to the normal policy pick (the drain-aware fallback)."""
         avail = [i for i, rt in enumerate(replicas) if not rt.draining()] \
             or list(range(len(replicas)))
-        i = avail[0] if len(avail) == 1 else self._pick(req, replicas, avail)
+        i = avail[0] if len(avail) == 1 \
+            else self._pick(req, replicas, avail, prefer)
         self.assignments[req.rid] = i
         return i
 
     # ------------------------------------------------------------ policies
     def _pick(self, req: Request, replicas: Sequence,
-              avail: List[int]) -> int:
+              avail: List[int], prefer=None) -> int:
         if self.policy == PREFIX_AFFINITY:
             home = self._affinity_home(req, len(replicas))
-            return home if home in avail else avail[home % len(avail)]
+            home = home if home in avail else avail[home % len(avail)]
+            if prefer and home not in prefer:
+                # fleet-warm replicas compete with the CRC home: divert to
+                # the least-loaded warm one only when that never worsens
+                # balance (load <= home's), so affinity cannot hotspot the
+                # first replica that happened to publish a popular prefix
+                pref = [i for i in avail if i in prefer]
+                if pref:
+                    best = min(pref, key=lambda i: (
+                        self._load(replicas[i]), replicas[i].pressure(), i))
+                    if self._load(replicas[best]) <= \
+                            self._load(replicas[home]):
+                        return best
+            return home
         if self.policy == SLACK_AWARE:
             return min(avail, key=lambda i: (
                 -self._finite_slack(replicas[i], req.model),

@@ -80,6 +80,25 @@ class ShardSet:
     def tier_metrics(self) -> Dict[str, ServingMetrics]:
         return self.runtime.tier_metrics()
 
+    # fleet prefix cache hooks delegate to the wrapped runtime (the whole
+    # set shares one representative index, like everything else here)
+    def set_prefix_listener(self, cb) -> None:
+        self.runtime.set_prefix_listener(cb)
+
+    def prefix_probe(self, model: str, tokens) -> int:
+        return self.runtime.prefix_probe(model, tokens)
+
+    def prefix_costs(self, model: str, span_tokens: int,
+                     prompt_tokens: int):
+        return self.runtime.prefix_costs(model, span_tokens, prompt_tokens)
+
+    def export_prefix(self, model: str, tokens, n_tokens: int):
+        return self.runtime.export_prefix(model, tokens, n_tokens)
+
+    def import_prefix(self, model: str, tokens, n_tokens: int,
+                      kv=None) -> int:
+        return self.runtime.import_prefix(model, tokens, n_tokens, kv=kv)
+
     # ------------------------------------------------------------ extras
     @property
     def partial_drain_ticks(self) -> int:

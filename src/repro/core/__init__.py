@@ -12,13 +12,15 @@ from repro.core.kv_allocator import (
     PagedKVAllocator, Segment, ShardedPagedKVAllocator,
 )
 from repro.core.prefix_index import (
-    PrefixIndex, PrefixMatch, PrefixNode, PrefixStats,
+    PrefixIndex, PrefixMatch, PrefixNode, PrefixStats, block_hash,
+    chain_hashes,
 )
 from repro.core.transfer_engine import (
     TransferEngine, TransferStats, split_blocks, merge_blocks, make_fetch,
 )
 from repro.core.transfer_pipeline import (
-    FetchMiss, PlanDrain, ShardedPlanDrain, StepTiming, choose_m_pipeline,
+    FetchMiss, PlanDrain, PrefixFetch, ShardedPlanDrain, StepTiming,
+    choose_m_pipeline,
     identity_plan, make_plan_pipeline, max_alpha_pipeline, plan_bubble,
     simulate_decode_step, sync_step_time, uniform_plan,
 )

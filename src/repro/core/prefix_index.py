@@ -28,20 +28,58 @@ simulator).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+#: hex chars kept of each chained SHA-256 block digest — 64 bits, plenty
+#: for a fleet index that tops out at a few hundred thousand blocks.
+HASH_HEX = 16
+
+
+def block_hash(parent_key: str, block: Sequence[int]) -> str:
+    """Chained content hash of one token block: H(parent_key || tokens),
+    SHA-truncated. Chaining means a key identifies the *whole* prefix up
+    to and including this block, so a single key lookup proves the entire
+    prefix matches — the property the fleet cache relies on."""
+    h = hashlib.sha256()
+    h.update(parent_key.encode())
+    h.update(b"|")
+    h.update(",".join(str(int(t)) for t in block).encode())
+    return h.hexdigest()[:HASH_HEX]
+
+
+def chain_hashes(tokens: Sequence[int], page_size: int,
+                 limit: Optional[int] = None, root_key: str = "") -> List[str]:
+    """Chained hashes for every *full* block of ``tokens`` (block i's key
+    covers blocks 0..i). ``root_key`` namespaces the chain (the fleet
+    cache roots it at the tenant/model name so equal token streams of
+    different models never collide)."""
+    n = len(tokens)
+    if limit is not None:
+        n = min(n, max(limit, 0))
+    n = (n // page_size) * page_size
+    keys: List[str] = []
+    key = root_key
+    for i in range(0, n, page_size):
+        key = block_hash(key, tokens[i:i + page_size])
+        keys.append(key)
+    return keys
 
 
 class PrefixNode:
-    __slots__ = ("block", "page", "parent", "children", "refs", "last_use")
+    __slots__ = ("block", "page", "parent", "children", "refs", "last_use",
+                 "key", "seq")
 
     def __init__(self, block: Tuple[int, ...], page: int,
-                 parent: Optional["PrefixNode"]):
+                 parent: Optional["PrefixNode"], key: str = "", seq: int = 0):
         self.block = block
         self.page = page
         self.parent = parent
         self.children: Dict[Tuple[int, ...], "PrefixNode"] = {}
         self.refs = 0          # live requests holding this block mapped
         self.last_use = 0
+        self.key = key         # chained content hash (fleet-cache identity)
+        self.seq = seq         # insertion order — stable LRU tie-break
 
     def is_leaf(self) -> bool:
         return not self.children
@@ -79,6 +117,7 @@ class PrefixIndex:
         self.root = PrefixNode((), -1, None)      # sentinel, never evicted
         self.stats = PrefixStats()
         self._clock = 0
+        self._seq = 0
         self._num_blocks = 0
 
     def __len__(self) -> int:
@@ -126,6 +165,24 @@ class PrefixIndex:
             self.record_lookup(matched, len(tokens))
         return PrefixMatch(matched, pages, nodes)
 
+    def peek(self, tokens: Sequence[int],
+             max_tokens: Optional[int] = None) -> int:
+        """Longest-prefix match length in tokens, WITHOUT mutating any
+        index state — no clock tick, no ``last_use`` refresh, no stats.
+        Fleet probes use this: a remote replica asking "do you still hold
+        this span?" must not perturb the local LRU order, or a 1-replica
+        fleet-cache run would stop being byte-identical to the bare
+        runtime."""
+        node = self.root
+        matched = 0
+        for blk in self._blocks(tokens, max_tokens):
+            child = node.children.get(blk)
+            if child is None:
+                break
+            matched += self.page_size
+            node = child
+        return matched
+
     def record_lookup(self, matched_tokens: int, lookup_tokens: int) -> None:
         self.stats.lookups += 1
         self.stats.lookup_tokens += lookup_tokens
@@ -163,7 +220,10 @@ class PrefixIndex:
             assert i < len(pages), "fewer pages than full token blocks"
             child = node.children.get(blk)
             if child is None:
-                child = PrefixNode(blk, int(pages[i]), node)
+                self._seq += 1
+                child = PrefixNode(blk, int(pages[i]), node,
+                                   key=block_hash(node.key, blk),
+                                   seq=self._seq)
                 node.children[blk] = child
                 self._num_blocks += 1
                 self.stats.inserted_blocks += 1
@@ -192,13 +252,17 @@ class PrefixIndex:
         """Drop up to ``max_blocks`` unreferenced cached blocks, leaf-first
         in LRU order, returning their page ids (the caller returns them to
         the allocator's free list). ``evictable`` lets the engine veto pages
-        the allocator still sees referenced."""
+        the allocator still sees referenced.
+
+        LRU ties break by insertion order (``seq``), never by trie
+        iteration order, so two identically-driven indices evict the same
+        pages in the same order."""
         freed: List[int] = []
         while len(freed) < max_blocks:
             leaves = self._evictable_leaves(evictable)
             if not leaves:
                 break
-            leaves.sort(key=lambda nd: nd.last_use)
+            leaves.sort(key=lambda nd: (nd.last_use, nd.seq))
             for nd in leaves:
                 if len(freed) >= max_blocks:
                     break

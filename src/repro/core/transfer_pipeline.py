@@ -449,3 +449,43 @@ class ShardedPlanDrain:
                     completed_set = list(_completed)
         self.last_advance_completions = flips
         return used_max, completed_set
+
+
+class PrefixFetch:
+    """A shared-prefix KV span crossing the host link from a warm replica
+    into a cold one (the fleet prefix cache's transfer path).
+
+    API-matches ``PlanDrain``'s byte-drain surface (``done`` /
+    ``remaining_bytes`` / ``advance(budget) -> (used, _)``) so the runtime
+    accounts prefix fetches and remap drains through the SAME per-tick
+    link budget: both draw β-slot-sized chunks from ``host_link_bw``, so a
+    tier-switch drain in flight stretches a concurrent prefix fetch and
+    vice versa — the contention is emergent, not configured.
+    """
+
+    def __init__(self, total_bytes: int, chunk_bytes: int, label: str = ""):
+        self.total_bytes = max(int(total_bytes), 0)
+        #: per-advance budget — one β-slot-sized unit, the same granularity
+        #: remap traffic moves at (callers pass the runtime's unit size)
+        self.chunk_bytes = max(int(chunk_bytes), 1)
+        self.label = label
+        self._paid = 0
+
+    @property
+    def done(self) -> bool:
+        return self._paid >= self.total_bytes
+
+    @property
+    def remaining_bytes(self) -> int:
+        return self.total_bytes - self._paid
+
+    def advance(self, budget_bytes) -> Tuple[int, List[int]]:
+        """Move up to ``budget_bytes`` of the fetch over the link.
+        Returns (bytes actually used, []) — the empty list keeps the
+        ``PlanDrain.advance`` shape (no layers flip residency here)."""
+        if self.done:
+            return 0, []
+        used = min(budget_bytes, self.remaining_bytes)
+        used = int(used) if math.isfinite(used) else self.remaining_bytes
+        self._paid += used
+        return used, []

@@ -285,6 +285,10 @@ class ServingEngine:
             n: PrefixIndex(page_size) for n, tc in tenants.items()
             if prefix_sharing and tc.paged}
         self._prefix_path: Dict[str, list] = {}   # rid -> acquired trie path
+        # fleet prefix cache hooks (cluster layer): publish listener and
+        # a sequence for synthetic import-allocation request ids
+        self._prefix_listener = None
+        self._import_seq = 0
         for t in self.tenants.values():
             if t.paged:
                 from repro.models.lm import layer_defs
@@ -356,6 +360,100 @@ class ServingEngine:
         stays disabled no matter what a cluster policy grants."""
         self.controller.cfg.dynamic_reversion = \
             enabled and self._reversion_base
+
+    # ------------------------------------------- fleet prefix cache hooks
+    def set_prefix_listener(self, cb) -> None:
+        """Install ``cb(model, tokens, now)``, invoked on every prefix
+        publish (the cluster layer points this at
+        ``FleetPrefixCache.publish``; ``now`` is in engine steps)."""
+        self._prefix_listener = cb
+
+    def prefix_probe(self, model: str, tokens) -> int:
+        """Non-mutating longest-cached-prefix length in tokens — what a
+        fleet fetch verifies against before trusting a possibly-stale
+        fleet index entry."""
+        idx = self.prefix.get(model)
+        return idx.peek(tokens) if idx is not None else 0
+
+    def prefix_costs(self, model: str, span_tokens: int,
+                     prompt_tokens: int):
+        """(bytes, t_fetch_s, t_recompute_s) for importing a cached
+        ``span_tokens`` prefix of a ``prompt_tokens`` prompt
+        (``PerfModel.prefix_transfer_costs``)."""
+        return self.tenants[model].perf.prefix_transfer_costs(
+            span_tokens, prompt_tokens)
+
+    def export_prefix(self, model: str, tokens, n_tokens: int):
+        """Gather the real KV of the leading cached blocks of ``tokens``
+        (up to ``n_tokens``) for a peer replica: returns ``(k, v)`` page
+        arrays of shape ``(repeats, blocks, page_size, kv_heads, head_dim)``
+        or None when nothing is cached. Uses ``match`` (LRU-refreshing,
+        stats-free): an export IS a use of those blocks."""
+        idx = self.prefix.get(model)
+        t = self.tenants.get(model)
+        if idx is None or t is None or not t.paged or t.state is None:
+            return None
+        ps = self.allocator.page_size
+        nblk = max(int(n_tokens), 0) // ps
+        if nblk <= 0:
+            return None
+        m = idx.match(tokens, max_tokens=nblk * ps, record=False)
+        if not m.pages:
+            return None
+        pages = np.asarray(m.pages[:nblk])
+        return (np.asarray(t.state["pool_k"][:, pages]),
+                np.asarray(t.state["pool_v"][:, pages]))
+
+    def import_prefix(self, model: str, tokens, n_tokens: int,
+                      kv=None) -> int:
+        """Install a peer's exported prefix KV into the local paged pool
+        as refcounted CoW cache pages — exactly like a local prefix fork:
+        fresh pages are allocated, the KV bytes land in ``pool_k/pool_v``,
+        the blocks enter the prefix index, and the cache takes the one
+        reference that keeps them alive (``cache_hold``). Blocks already
+        cached locally are skipped (only the delta is imported). Returns
+        the tokens imported."""
+        idx = self.prefix.get(model)
+        t = self.tenants.get(model)
+        if idx is None or t is None or not t.paged or t.state is None \
+                or kv is None:
+            return 0
+        k, v = kv
+        ps = self.allocator.page_size
+        nblk = min(max(int(n_tokens), 0), len(tokens),
+                   k.shape[1] * ps) // ps
+        have = idx.peek(tokens, max_tokens=nblk * ps) // ps
+        if nblk <= have:
+            return 0
+        new_blocks = nblk - have
+        self._import_seq += 1
+        rid = f"__prefix_import_{self._import_seq}"
+        pages = self.allocator.allocate(rid, new_blocks * ps)
+        if pages is None:
+            self._reclaim(new_blocks - self.allocator.free_pages)
+            pages = self.allocator.allocate(rid, new_blocks * ps)
+            if pages is None:
+                return 0
+        arr = jnp.asarray(np.asarray(pages))
+        t.state = dict(
+            t.state,
+            pool_k=t.state["pool_k"].at[:, arr].set(
+                jnp.asarray(k[:, have:nblk])),
+            pool_v=t.state["pool_v"].at[:, arr].set(
+                jnp.asarray(v[:, have:nblk])),
+        )
+        # the trie path beyond block ``have`` cannot exist locally (trie
+        # property: a missing block severs every deeper node on the path),
+        # so insert consumes exactly our fresh pages
+        page_seq = [-1] * have + list(pages)
+        new_pages, _path = idx.insert(tokens, page_seq,
+                                      max_tokens=nblk * ps)
+        assert new_pages == list(pages), (new_pages, pages)
+        self.allocator.cache_hold(new_pages)
+        self.allocator.free(rid)
+        self.events.append((self.step_idx, "prefix-import",
+                            f"{model} blocks={len(new_pages)}"))
+        return len(new_pages) * ps
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
         while self.step_idx < max_steps and self.busy():
@@ -741,6 +839,8 @@ class ServingEngine:
         if path:
             idx.acquire(path)
             self._prefix_path[r.rid] = path
+            if self._prefix_listener is not None:
+                self._prefix_listener(t.name, tokens, float(self.step_idx))
 
     # --------------------------------------------------------------- decode
     def _decode(self, t: Tenant) -> bool:

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Optional, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.expert_remap import step_fetch_plan
@@ -215,6 +215,35 @@ class PerfModel:
         if self.shards > 1:
             t += self.collective_time(prompt_tokens * batch)
         return t
+
+    def prefix_transfer_costs(self, span_tokens: int, prompt_tokens: int,
+                              kv_token_bytes: Optional[int] = None
+                              ) -> Tuple[int, float, float]:
+        """SwiftCache-style transfer-vs-recompute costs for reusing a
+        ``span_tokens`` cached prefix of a ``prompt_tokens`` prompt held
+        on another replica. Returns ``(bytes, t_fetch_s, t_recompute_s)``;
+        fetch wins when ``t_fetch < t_recompute``.
+
+        ``t_fetch`` is the span's KV crossing the host link. The recompute
+        side is ``prefill_time`` of the matched span measured *marginally*
+        — ``prefill_time(prompt) - prefill_time(suffix)`` — because the
+        unmatched suffix must prefill either way: the suffix prefill
+        already pays the full resident-parameter HBM read, so billing the
+        span a second whole-model pass would make fetch win unconditionally
+        on every ``hw.HOST_LINKS`` class. Marginally, short spans on short
+        prompts cost ~nothing to recompute (the prefill is HBM-bound and
+        the floor is paid anyway) while long spans cost the full quadratic
+        attention + FLOP term — which is where the per-link crossover
+        lives."""
+        span = max(min(int(span_tokens), int(prompt_tokens) - 1), 0)
+        kb = int(kv_token_bytes) if kv_token_bytes else \
+            max(self.shard_kv_token_bytes, 1)
+        nbytes = span * kb
+        t_fetch = nbytes / self.hw.host_link_bw
+        suffix = max(prompt_tokens - span, 1)
+        t_rec = max(self.prefill_time(prompt_tokens)
+                    - self.prefill_time(suffix), 0.0)
+        return nbytes, t_fetch, t_rec
 
     # --------------------------------------------------- expert granularity
     @property

@@ -88,6 +88,14 @@ class ServingMetrics:
     # (engine: max_steps exhausted; simulator: max_time) — nonzero means
     # the latency/throughput numbers above under-count real work
     unfinished: int = 0
+    # fleet prefix cache (0 when no FleetPrefixCache is installed; filled
+    # by ReplicaGroup.metrics from the fleet index's counters).
+    # fleet_hit_rate = fleet-matched / looked-up prompt tokens — the
+    # replica-count-invariant counterpart of prefix_hit_rate
+    fleet_hit_rate: float = 0.0
+    transferred_prefix_tokens: int = 0   # fetched cross-replica
+    recomputed_prefix_tokens: int = 0    # fleet-hit but recompute won
+    prefix_fetch_bytes: int = 0          # KV bytes moved over host links
     # per-request (ttft-or-None, max tbt) samples retained so SLO
     # attainment can be evaluated against any spec after the fact
     _per_request: List = dataclasses.field(
@@ -100,6 +108,12 @@ class ServingMetrics:
         default=0, repr=False, compare=False)
     _decode_time: float = dataclasses.field(   # bubble_fraction denominator
         default=0.0, repr=False, compare=False)
+    # fleet_hit_rate numerator/denominator, kept so ``merge`` recomputes
+    # the rate from pooled counts instead of averaging rates
+    _fleet_matched_tokens: int = dataclasses.field(
+        default=0, repr=False, compare=False)
+    _fleet_lookup_tokens: int = dataclasses.field(
+        default=0, repr=False, compare=False)
 
     @staticmethod
     def from_requests(reqs: List[Request], makespan: float,
@@ -159,6 +173,8 @@ class ServingMetrics:
         saved = sum(p.saved_prefill_tokens for p in parts)
         bubble = sum(p.bubble_time for p in parts)
         decode = sum(p._decode_time for p in parts)
+        fleet_matched = sum(p._fleet_matched_tokens for p in parts)
+        fleet_lookup = sum(p._fleet_lookup_tokens for p in parts)
         return ServingMetrics(
             p99_ttft=percentile(ttfts, 99),
             p99_tbt=percentile(tbts, 99),
@@ -175,10 +191,19 @@ class ServingMetrics:
             bubble_time=bubble,
             bubble_fraction=bubble / decode if decode else 0.0,
             unfinished=sum(p.unfinished for p in parts),
+            fleet_hit_rate=fleet_matched / fleet_lookup
+            if fleet_lookup else 0.0,
+            transferred_prefix_tokens=sum(
+                p.transferred_prefix_tokens for p in parts),
+            recomputed_prefix_tokens=sum(
+                p.recomputed_prefix_tokens for p in parts),
+            prefix_fetch_bytes=sum(p.prefix_fetch_bytes for p in parts),
             _per_request=per_request,
             _tbts=tbts,
             _prompt_tokens=prompt_tokens,
             _decode_time=decode,
+            _fleet_matched_tokens=fleet_matched,
+            _fleet_lookup_tokens=fleet_lookup,
         )
 
     def slo_attainment(self, spec: SLOSpec) -> float:

@@ -92,6 +92,21 @@ class ServingRuntime(Protocol):
 
     def tier_metrics(self) -> Dict[str, ServingMetrics]: ...
 
+    # fleet prefix cache hooks (cluster/fleet_prefix_cache.py): publish
+    # notification, non-mutating local probe, the transfer-vs-recompute
+    # quantities, and cross-replica KV export/import
+    def set_prefix_listener(self, cb) -> None: ...
+
+    def prefix_probe(self, model: str, tokens) -> int: ...
+
+    def prefix_costs(self, model: str, span_tokens: int,
+                     prompt_tokens: int): ...
+
+    def export_prefix(self, model: str, tokens, n_tokens: int): ...
+
+    def import_prefix(self, model: str, tokens, n_tokens: int,
+                      kv=None) -> int: ...
+
 
 def scale_slo(slo: SLOSpec, k: float) -> SLOSpec:
     """Convert an SLOSpec between clocks (seconds -> engine steps):

@@ -37,8 +37,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import (
     ControllerConfig, ExpertRemapState, MemoryInfo, MetadataStore, ModelInfo,
-    PlanDrain, PrefixIndex, RemapPlan, RemappingController, ShardedPlanDrain,
-    identity_plan,
+    PlanDrain, PrefixFetch, PrefixIndex, RemapPlan, RemappingController,
+    ShardedPlanDrain, identity_plan,
 )
 from repro.serving.hw import HardwareSpec, GH200
 from repro.serving.perf_model import PerfModel
@@ -176,6 +176,9 @@ class Simulator:
         expert_pin_fraction: float = 0.125,
         shard_devices: int = 1,           # devices in this shard set (SPMD)
         shard_lockstep: bool = True,      # False = naive per-shard drains
+        prefix_dedup: bool = False,       # publish prompt blocks at admission
+                                          # (same-round arrivals fork, not
+                                          # re-prefill); monolithic path only
         fast: bool = False,               # O(1)-per-tick hot path (bit-
                                           # identical; see docs/ARCHITECTURE)
     ):
@@ -274,6 +277,14 @@ class Simulator:
         self.finished: List[Request] = []
         self.host_link_busy_s = 0.0
         self.swap_overflow_peak = 0
+        # fleet prefix cache hooks: a publish listener (the cluster layer's
+        # fleet index), in-flight cross-replica KV fetches (byte-drains that
+        # share the host link with remap traffic), and fetch accounting
+        self.prefix_dedup = bool(prefix_dedup)
+        self._prefix_listener = None
+        self._prefix_fetches: List[PrefixFetch] = []
+        self.prefix_fetch_bytes = 0
+        self.prefix_fetched_tokens = 0
         # transfer-pipeline state: the plan in effect per tenant, in-flight
         # tier-switch drains, and cold-start flags (first step after a
         # plan change has no prefetch from the previous iteration)
@@ -346,6 +357,73 @@ class Simulator:
         stays disabled no matter what a cluster policy grants."""
         self.controller.cfg.dynamic_reversion = \
             enabled and self._reversion_base
+
+    # ------------------------------------------- fleet prefix cache hooks
+    def set_prefix_listener(self, cb) -> None:
+        """Install ``cb(model, tokens, now)``, invoked whenever this
+        replica publishes a prefix into its local index (the cluster
+        layer points this at ``FleetPrefixCache.publish``)."""
+        self._prefix_listener = cb
+
+    def prefix_probe(self, model: str, tokens) -> int:
+        """Non-mutating longest-cached-prefix length in tokens (no LRU
+        refresh, no stats) — what a fleet fetch verifies against before
+        trusting a possibly-stale fleet index entry."""
+        t = self.tenants.get(model)
+        if t is None or t.index is None:
+            return 0
+        return t.index.peek(tokens)
+
+    def prefix_costs(self, model: str, span_tokens: int,
+                     prompt_tokens: int):
+        """(bytes, t_fetch_s, t_recompute_s) for importing a cached
+        ``span_tokens`` prefix of a ``prompt_tokens`` prompt — the
+        replica-local quantities behind the transfer-vs-recompute call
+        (``PerfModel.prefix_transfer_costs``)."""
+        t = self.tenants[model]
+        return t.perf.prefix_transfer_costs(span_tokens, prompt_tokens,
+                                            t.kv_token_bytes)
+
+    def export_prefix(self, model: str, tokens, n_tokens: int):
+        """Hand the leading ``n_tokens`` cached KV to a peer. The
+        simulator's KV is virtual — content-addressed keys guarantee the
+        importer reconstructs identical blocks from the token stream — so
+        there is nothing to ship; the engine returns real page arrays."""
+        return None
+
+    def import_prefix(self, model: str, tokens, n_tokens: int,
+                      kv=None) -> int:
+        """Install the leading full blocks of ``tokens[:n_tokens]`` into
+        the local prefix index as if a local request had published them,
+        and enqueue the host-link transfer for the blocks actually new
+        here. The fetch drains through ``_advance_drains`` at remap-unit
+        granularity, so it contends with in-flight tier-switch drains for
+        the same link. Returns the newly imported tokens."""
+        t = self.tenants.get(model)
+        if t is None or t.index is None:
+            return 0
+        ps = t.index.page_size
+        nblk = min(int(n_tokens), len(tokens)) // ps
+        if nblk <= 0:
+            return 0
+        vpages = list(range(t._next_vpage, t._next_vpage + nblk))
+        new, _path = t.index.insert(tokens, vpages, max_tokens=nblk * ps)
+        t._next_vpage += nblk
+        got = len(new) * ps
+        if got:
+            nbytes = got * t.kv_token_bytes
+            self._prefix_fetches.append(PrefixFetch(
+                nbytes, self._unit_bytes(model), label=model))
+            self.prefix_fetch_bytes += nbytes
+            self.prefix_fetched_tokens += got
+        return got
+
+    def prefix_stats(self):
+        """Per-tenant prefix-cache counters (engine-shaped; empty when
+        sharing is off)."""
+        return {n: dataclasses.asdict(t.index.stats)
+                | {"cached_blocks": t.index.num_blocks}
+                for n, t in self.tenants.items() if t.index is not None}
 
     def tick(self) -> float:
         """One scheduling iteration; returns the elapsed simulated
@@ -595,7 +673,41 @@ class Simulator:
             r.token_times.append(now)
             t._priv_tokens += r.prompt_len + 1 - matched
             self._note_enter_running(t, r)
+            if self.prefix_dedup and t.index is not None:
+                # pre-flight batch dedup: publish the prompt's blocks NOW
+                # (their KV exists once this iteration's prefill runs), so
+                # same-round arrivals sharing the prefix match and fork
+                # instead of racing N identical prefills to a post-finish
+                # publish. Monolithic path only — a chunked prefill's KV
+                # does not exist until its chunks complete.
+                self._publish_admitted(t, r, matched)
         return dt
+
+    def _publish_admitted(self, t: SimTenant, r: Request,
+                          matched: int) -> None:
+        """Early-publish an admitted request's full prompt blocks into the
+        local index (and the fleet listener). The blocks ARE the request's
+        own pages, so (a) they move from private to cache accounting —
+        counted once, like the engine's ``cache_hold`` on a published page
+        — and (b) the full path is pinned until the request finishes."""
+        real = getattr(r, "_real_prompt_len", r.prompt_len)
+        nblk = real // t.index.page_size
+        if nblk == 0:
+            return
+        vpages = list(range(t._next_vpage, t._next_vpage + nblk))
+        _new, path = t.index.insert(r.prompt, vpages, max_tokens=real)
+        t._next_vpage += nblk
+        pub = nblk * t.index.page_size
+        if pub > matched:
+            t._priv_tokens -= pub - matched
+            t._shared[r.rid] = pub
+        old = t._paths.pop(r.rid, None)
+        if old:
+            t.index.release(old)
+        t.index.acquire(path)
+        t._paths[r.rid] = path
+        if self._prefix_listener is not None:
+            self._prefix_listener(t.name, r.prompt[:real], self.now)
 
     def _note_enter_running(self, t: SimTenant, r: Request) -> None:
         """Bookkeeping at the moment a request joins ``t.running`` (its
@@ -849,6 +961,8 @@ class Simulator:
         if path:
             t.index.release(path)
         t._shared.pop(r.rid, None)
+        if self._prefix_listener is not None and nblk:
+            self._prefix_listener(t.name, r.prompt[:real], self.now)
 
     # ------------------------------------------------------------- pressure
     def _handle_decisions(self, decisions) -> float:
@@ -918,6 +1032,21 @@ class Simulator:
                 # target while the set must keep serving the interim —
                 # its pipeline restarts cold against the rest of the set
                 self._cold[name] = True
+        # cross-replica prefix fetches ride the same link at the same
+        # unit granularity: a tick that advances both a tier-switch drain
+        # and a fetch charges both transfers' time — β-slot contention
+        # between remap traffic and prefix imports is emergent here
+        if self._prefix_fetches:
+            still: List[PrefixFetch] = []
+            for f in self._prefix_fetches:
+                used, _ = f.advance(f.chunk_bytes)
+                if used:
+                    t_used = used / self.hw.host_link_bw
+                    dt += t_used
+                    self.host_link_busy_s += t_used
+                if not f.done:
+                    still.append(f)
+            self._prefix_fetches = still
         if any(getattr(d, "partial", False) for d in self._drains.values()):
             self.shard_partial_drain_ticks += 1
         return dt

@@ -1,0 +1,407 @@
+"""Fleet-wide content-addressed prefix cache.
+
+Covers the cluster index itself (chained keys, TTL + capacity dual
+eviction, pre-flight batch dedup), the deterministic-eviction contract of
+the per-replica ``PrefixIndex``, the analytic transfer-vs-recompute
+decision across host-link classes (including that it actually flips), the
+engine's export/import KV round trip (greedy decode stays bit-identical
+downstream of an imported prefix), and 1-replica fleet transparency.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.cluster import FleetPrefixCache, ReplicaGroup, Router
+from repro.configs import ARCHS
+from repro.core.prefix_index import PrefixIndex, block_hash, chain_hashes
+from repro.serving import RuntimeConfig, TenantSpec
+from repro.serving.hw import GH200, HOST_LINKS
+from repro.serving.perf_model import PerfModel
+from repro.serving.request import Request
+from repro.serving.traces import ConversationSpec, multi_turn_trace
+
+A = "llama3-8b"
+
+
+def frac(name, kv_gb, hw=GH200):
+    pm = PerfModel(ARCHS[name], hw)
+    return (pm.param_bytes + kv_gb * 2**30) / hw.hbm_bytes
+
+
+# ------------------------------------------------------- content hashing
+def test_chain_hashes_chain_and_root():
+    toks = list(range(16))
+    keys = chain_hashes(toks, 4, root_key="m")
+    assert len(keys) == 4                       # full blocks only
+    assert keys[0] == block_hash("m", toks[:4])
+    assert keys[1] == block_hash(keys[0], toks[4:8])
+    # a different root (model) never aliases equal token streams
+    assert chain_hashes(toks, 4, root_key="other")[0] != keys[0]
+    # a mid-stream token change reroutes every key from that block on
+    toks2 = list(toks)
+    toks2[5] += 1
+    keys2 = chain_hashes(toks2, 4, root_key="m")
+    assert keys2[0] == keys[0]
+    assert keys2[1] != keys[1] and keys2[2] != keys[2]
+    # partial trailing block is excluded
+    assert chain_hashes(toks[:7], 4, root_key="m") == keys[:1]
+
+
+def test_fleet_publish_match_depths():
+    fc = FleetPrefixCache(page_size=4)
+    toks = list(range(16))
+    fc.publish(0, "m", toks, now=0.0)           # replica 0: 4 blocks
+    fc.publish(1, "m", toks[:8], now=1.0)       # replica 1: 2 blocks
+    m = fc.match("m", toks, now=2.0)
+    assert m.tokens == 16
+    assert m.depths == {0: 16, 1: 8}
+    assert m.best_holder() == (0, 16)
+    assert m.best_holder(exclude=0) == (1, 8)
+    # unknown prompt: no depths, no tokens
+    assert fc.match("m", [99] * 8, now=2.0).tokens == 0
+    # model-rooted: same tokens under another tenant miss entirely
+    assert fc.match("other", toks, now=2.0).tokens == 0
+    assert fc.stats.hits == 1
+    assert fc.stats.matched_tokens == 16
+
+
+def test_fleet_ttl_expiry_on_touch():
+    fc = FleetPrefixCache(page_size=4, ttl=5.0)
+    toks = list(range(8))
+    fc.publish(0, "m", toks, now=0.0)
+    assert fc.match("m", toks, now=4.0).tokens == 8   # refreshes last_use
+    assert fc.match("m", toks, now=8.0).tokens == 8   # 4s idle: alive
+    assert fc.match("m", toks, now=20.0).tokens == 0  # 12s idle: expired
+    assert fc.stats.expired_blocks == 1               # lazy: head block only
+    assert len(fc) == 1                               # orphaned deep block
+
+
+def test_fleet_capacity_lru_eviction_with_seq_ties():
+    fc = FleetPrefixCache(page_size=4, capacity_blocks=2)
+    fc.publish(0, "m", list(range(4)), now=0.0)
+    fc.publish(0, "m", list(range(100, 104)), now=0.0)  # same last_use
+    fc.publish(0, "m", list(range(200, 204)), now=1.0)
+    # tie on last_use=0.0 broken by insertion seq: the FIRST publish dies
+    assert len(fc) == 2
+    assert fc.stats.evicted_blocks == 1
+    assert fc.match("m", list(range(4)), now=1.0).tokens == 0
+    assert fc.match("m", list(range(100, 104)), now=1.0).tokens == 4
+
+
+def test_fleet_drop_replica_keeps_shared_entries():
+    fc = FleetPrefixCache(page_size=4)
+    shared, only0 = list(range(4)), list(range(50, 54))
+    fc.publish(0, "m", shared, now=0.0)
+    fc.publish(1, "m", shared, now=0.0)
+    fc.publish(0, "m", only0, now=0.0)
+    fc.drop_replica(0)
+    assert fc.match("m", shared, now=1.0).depths == {1: 4}
+    assert fc.match("m", only0, now=1.0).tokens == 0
+
+
+def test_analyze_batch_groups_by_leading_block():
+    fc = FleetPrefixCache(page_size=4)
+    sys_p = list(range(4))
+    batch = [("m", sys_p + [7]), ("m", sys_p + [9]),
+             ("m", list(range(40, 45))), ("m", [1, 2]),      # sub-block
+             ("other", sys_p + [7])]                          # other tenant
+    groups = fc.analyze_batch(batch)
+    assert list(groups.values()) == [[0, 1]]
+    assert fc.batch_key("m", [1, 2]) is None
+
+
+# -------------------------------------- PrefixIndex deterministic eviction
+def _drive(idx: PrefixIndex, ops):
+    for kind, toks, pages in ops:
+        if kind == "ins":
+            idx.insert(toks, pages)
+        else:
+            idx.match(toks)
+
+
+def test_prefix_index_evict_deterministic_under_lru_ties():
+    """Two identically-driven indices evict identical pages in identical
+    order — LRU ties break by insertion seq, not trie iteration order."""
+    ops = [("ins", list(range(4)), [0]),
+           ("ins", list(range(10, 14)), [1]),
+           ("ins", list(range(20, 24)), [2]),
+           ("match", list(range(10, 14)), None)]
+    evs = []
+    for _ in range(2):
+        idx = PrefixIndex(page_size=4)
+        _drive(idx, ops)
+        # blocks 0 and 2 tie on last_use (inserted, never matched); the
+        # refreshed block 1 must survive both
+        evs.append(idx.evict(2))
+        assert idx.stats.evicted_blocks == 2
+    assert evs[0] == evs[1] == [0, 2]
+
+
+def test_prefix_index_peek_is_non_mutating():
+    idx = PrefixIndex(page_size=4)
+    idx.insert(list(range(8)), [0, 1])
+    before = dataclasses.asdict(idx.stats)
+    clock = idx._clock
+    assert idx.peek(list(range(8))) == 8
+    assert idx.peek(list(range(8)), max_tokens=5) == 4
+    assert idx.peek([9] * 8) == 0
+    assert dataclasses.asdict(idx.stats) == before
+    assert idx._clock == clock
+
+
+# -------------------------------------------- transfer-vs-recompute rule
+@pytest.mark.parametrize("link", sorted(HOST_LINKS))
+@pytest.mark.parametrize("span,prompt", [
+    (96, 128),       # HBM-floor regime: marginal recompute is nearly free
+    (512, 576),      # still floor-bound: suffix 64 vs prompt 576
+    (3968, 4096),    # long span: fetch amortizes on every link
+])
+def test_transfer_costs_match_analytic_rule(link, span, prompt):
+    hw = GH200.with_host_link(link)
+    pm = PerfModel(ARCHS[A], hw)
+    nbytes, t_fetch, t_rec = pm.prefix_transfer_costs(span, prompt)
+    assert nbytes == span * pm.shard_kv_token_bytes
+    assert t_fetch == pytest.approx(nbytes / HOST_LINKS[link])
+    suffix = prompt - span
+    assert t_rec == pytest.approx(
+        max(pm.prefill_time(prompt) - pm.prefill_time(suffix), 0.0))
+
+
+def test_transfer_decision_flips_across_links_and_spans():
+    """The analytic crossover is real: over HOST_LINKS x span lengths both
+    outcomes occur — slow links recompute short floor-bound spans, fast
+    links (and long spans everywhere) fetch."""
+    decisions = {}
+    for link in sorted(HOST_LINKS):
+        pm = PerfModel(ARCHS[A], GH200.with_host_link(link))
+        for span, prompt in [(96, 128), (3968, 4096)]:
+            _, t_fetch, t_rec = pm.prefix_transfer_costs(span, prompt)
+            decisions[link, span] = t_fetch < t_rec
+    assert decisions["nvlink_c2c", 96]          # fast link fetches
+    assert not decisions["pcie4", 96]           # slow link recomputes
+    assert all(decisions[link, 3968] for link in sorted(HOST_LINKS))
+    # spans are clamped so at least one prompt token is always computed
+    pm = PerfModel(ARCHS[A], GH200)
+    nb, _, _ = pm.prefix_transfer_costs(128, 128)
+    assert nb == 127 * pm.shard_kv_token_bytes
+
+
+# ----------------------------------------------- sim fleet: cluster level
+def _config(hw, **kw):
+    return RuntimeConfig(
+        tenants={A: TenantSpec(ARCHS[A], max_batch=8,
+                               mem_fraction=frac(A, 2.0, hw))},
+        mode="mirage", scheduler="temporal", prefix_sharing=True, **kw)
+
+
+def _trace(sessions=8, turns=3):
+    return multi_turn_trace(
+        [ConversationSpec(A, num_sessions=sessions, turns=turns,
+                          system_prompt_len=256, user_len=32,
+                          assistant_len=64, max_new_tokens=32,
+                          think_time=1.0, session_rate=2.0)], seed=3)
+
+
+def _run_group(n, fleet, hw=GH200, router="prefix_affinity"):
+    fc = FleetPrefixCache(page_size=32) if fleet else None
+    g = ReplicaGroup.from_config(_config(hw), n, backend="sim",
+                                 router=Router(router),
+                                 fleet_cache=fc, hw=hw)
+    met = g.run(_trace())
+    return met, fc
+
+
+def test_one_replica_fleet_cache_is_transparent():
+    """With one replica every fleet hit is already local: no import can
+    fire, and match/publish never touch replica state — all non-fleet
+    metrics are byte-identical to the fleet-off run."""
+    base, _ = _run_group(1, fleet=False)
+    one, fc = _run_group(1, fleet=True)
+    da, db = dataclasses.asdict(base), dataclasses.asdict(one)
+    for k in da:
+        if "fleet" in k or "prefix_fetch" in k or k.endswith("prefix_tokens"):
+            continue
+        if isinstance(da[k], float) and math.isnan(da[k]) \
+                and math.isnan(db[k]):
+            continue
+        assert da[k] == db[k], k
+    assert fc.stats.transfers == 0
+    assert one.transferred_prefix_tokens == 0
+    assert one.fleet_hit_rate > 0               # observed, never acted on
+
+
+def test_fleet_cache_transfers_and_raises_hit_rate():
+    """At 4 replicas the per-replica hit rate dilutes; the fleet cache
+    imports warm spans cross-replica, so local hit rate recovers and the
+    fleet counters show real transfers on the fast link."""
+    hw = GH200.with_host_link("nvlink_c2c")
+    base, _ = _run_group(4, fleet=False, hw=hw)
+    met, fc = _run_group(4, fleet=True, hw=hw)
+    assert fc.stats.transfers > 0
+    assert met.transferred_prefix_tokens > 0
+    assert met.prefix_fetch_bytes > 0
+    assert met.fleet_hit_rate > 0
+    assert met.prefix_hit_rate >= base.prefix_hit_rate
+    # fleet counters survive ServingMetrics.merge re-aggregation
+    from repro.serving.request import ServingMetrics
+    remerged = ServingMetrics.merge([met])
+    assert remerged.fleet_hit_rate == met.fleet_hit_rate
+    assert remerged.transferred_prefix_tokens == met.transferred_prefix_tokens
+
+
+def test_fleet_hit_rate_non_decreasing_in_replica_count():
+    rates = []
+    for n in (1, 2, 4):
+        met, _ = _run_group(n, fleet=True)
+        rates.append(met.fleet_hit_rate)
+    assert rates[0] > 0
+    assert all(b >= a - 1e-12 for a, b in zip(rates, rates[1:]))
+
+
+def test_preflight_batch_dedup_coroutes_simultaneous_arrivals():
+    """Same-round arrivals sharing a leading block and missing the fleet
+    index are steered to one leader replica, so the shared block prefills
+    once and the rest CoW-fork it locally."""
+    hw = GH200
+    fc = FleetPrefixCache(page_size=32)
+    g = ReplicaGroup.from_config(_config(hw), 4, backend="sim",
+                                 router=Router("least_loaded"),
+                                 fleet_cache=fc, hw=hw)
+    sys_p = np.arange(1, 65, dtype=np.int32)
+    reqs = [Request(f"r{i}", A,
+                    np.concatenate([sys_p, np.full(8, 100 + i, np.int32)]),
+                    max_new_tokens=4, arrival=0.0) for i in range(4)]
+    g.run(reqs)
+    assert fc.stats.dedup_coroutes == 3         # 3 followers, 1 leader
+    homes = {g.router.assignments[f"r{i}"] for i in range(4)}
+    assert len(homes) == 1                      # all co-routed
+
+
+def _dedup_sim(dedup, fast=False):
+    from repro.serving.simulator import SimTenantConfig, Simulator
+    sim = Simulator({A: SimTenantConfig(ARCHS[A], 8, frac(A, 2.0))},
+                    mode="mirage", prefix_sharing=True,
+                    prefix_dedup=dedup, fast=fast)
+    sys_p = np.arange(1, 129, dtype=np.int32)
+    sim.run([Request(f"r{i}", A,
+                     np.concatenate([sys_p, np.full(8, 50 + i, np.int32)]),
+                     max_new_tokens=8, arrival=0.0) for i in range(3)],
+            max_time=1e6)
+    return sim
+
+
+def test_sim_prefix_dedup_shares_same_round_admissions():
+    """With ``prefix_dedup`` the first admission publishes its prompt
+    blocks immediately, so identical prompts admitted the same round
+    CoW-fork instead of waiting for the leader to retire."""
+    off = _dedup_sim(False).metrics()
+    on = _dedup_sim(True).metrics()
+    assert on.saved_prefill_tokens > off.saved_prefill_tokens
+    # dedup only moves prefill work to the cache; decode output volume
+    # and request accounting are unchanged
+    assert on.total_tokens == off.total_tokens
+    assert on.unfinished == off.unfinished == 0
+
+
+def test_sim_prefix_dedup_fast_path_identical():
+    ref, fast = _dedup_sim(True), _dedup_sim(True, fast=True)
+    da = dataclasses.asdict(ref.metrics())
+    db = dataclasses.asdict(fast.metrics())
+    for k in da:
+        if isinstance(da[k], float) and math.isnan(da[k]) \
+                and math.isnan(db[k]):
+            continue
+        assert da[k] == db[k], k
+
+
+# ------------------------------------------- engine KV export / import
+@pytest.fixture(scope="module")
+def tiny_engines():
+    import jax
+
+    from repro.configs import scaled_config
+    from repro.models import build_model
+    from repro.serving import ServingEngine, TenantConfig
+
+    cfg = scaled_config(ARCHS[A], num_layers=2)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+
+    def mk():
+        return ServingEngine(
+            {"m": TenantConfig(cfg, params, max_batch=4, max_context=64,
+                               paged=True)},
+            base_kv_pages=64, page_size=4, prefix_sharing=True)
+    return mk
+
+
+def test_engine_export_import_roundtrip(tiny_engines):
+    """Pages fetched from a warm engine land in the cold engine's paged
+    pool byte-identically, enter the index as refcounted cached blocks,
+    and greedy decode downstream of the import matches a from-scratch
+    prefill bit for bit."""
+    prompt = np.arange(1, 25, dtype=np.int32)      # 6 full pages
+    warm, cold, fresh = tiny_engines(), tiny_engines(), tiny_engines()
+    r = Request("seed", "m", prompt, max_new_tokens=4)
+    warm.submit([r])
+    warm.run(max_steps=500)
+    span = warm.prefix_probe("m", prompt)
+    assert span == len(prompt)
+    kv = warm.export_prefix("m", prompt, span)
+    assert kv is not None
+    got = cold.import_prefix("m", prompt, span, kv=kv)
+    assert got == span
+    assert cold.prefix_probe("m", prompt) == span
+    # imported pages are byte-identical to the holder's
+    k_w, _ = warm.export_prefix("m", prompt, span)
+    k_c, v_c = cold.export_prefix("m", prompt, span)
+    np.testing.assert_array_equal(k_w, k_c)
+    cold.allocator.check_invariants()
+    cold.prefix["m"].check_invariants()
+    # greedy decode: recompute-from-scratch vs downstream-of-import
+    outs = []
+    for eng in (fresh, cold):
+        rq = Request("probe", "m", prompt.copy(), max_new_tokens=8)
+        eng.submit([rq])
+        eng.run(max_steps=500)
+        outs.append(list(rq.generated))
+    assert outs[0] == outs[1]
+
+
+def test_engine_import_is_incremental(tiny_engines):
+    """Importing a span the engine partially holds only allocates and
+    writes the missing tail blocks."""
+    prompt = np.arange(1, 25, dtype=np.int32)
+    warm, cold = tiny_engines(), tiny_engines()
+    r = Request("seed", "m", prompt, max_new_tokens=4)
+    warm.submit([r])
+    warm.run(max_steps=500)
+    kv = warm.export_prefix("m", prompt, 8)
+    assert cold.import_prefix("m", prompt, 8, kv=kv) == 8
+    before = len(cold.prefix["m"])
+    kv = warm.export_prefix("m", prompt, 24)
+    assert cold.import_prefix("m", prompt, 24, kv=kv) == 16   # new only
+    assert len(cold.prefix["m"]) == before + 4
+    assert cold.prefix_probe("m", prompt) == 24
+
+
+def test_fleet_recompute_path_counts_tokens():
+    """Force the decision to the recompute side (pcie4 + short floor-bound
+    prompts): the fleet reports the hit but charges recomputed tokens and
+    moves zero bytes."""
+    hw = GH200.with_host_link("pcie4")
+    fc = FleetPrefixCache(page_size=32)
+    g = ReplicaGroup.from_config(_config(hw), 2, backend="sim",
+                                 router=Router("least_loaded"),
+                                 fleet_cache=fc, hw=hw)
+    sys_p = np.arange(1, 129, dtype=np.int32)   # 128-token shared prompt
+    reqs = [Request(f"r{i}", A,
+                    np.concatenate([sys_p, np.full(8, 200 + i, np.int32)]),
+                    max_new_tokens=4, arrival=float(i)) for i in range(6)]
+    # alternate arrivals across replicas via least_loaded: later arrivals
+    # fleet-hit the other replica's published system prompt
+    g.run(reqs)
+    assert fc.stats.recomputed_tokens > 0
+    assert fc.stats.transfers == 0
+    assert fc.stats.fetch_bytes == 0

@@ -196,6 +196,46 @@ def test_replica_group_identical(link, n_replicas):
                              f"{link} x{n_replicas}")
 
 
+# ------------------------------------------------- fleet prefix cache
+@pytest.mark.parametrize("link", ["nvlink_c2c", "pcie4"])
+def test_fleet_prefix_cache_identical(link):
+    """Fleet cache on: cross-replica prefix imports ride the same host
+    link as remap drains, so both paths must charge the fetch time — and
+    route every request — identically. The fleet counters are part of
+    ``asdict`` and therefore part of the identity check."""
+    from repro.cluster import FleetPrefixCache, ReplicaGroup, Router
+    from repro.serving import RuntimeConfig, TenantSpec
+    from repro.serving.traces import ConversationSpec, multi_turn_trace
+
+    hw = GH200.with_host_link(link)
+
+    def config():
+        return RuntimeConfig(
+            tenants={A: TenantSpec(ARCHS[A], max_batch=8,
+                                   mem_fraction=frac(A, 4.0, hw))},
+            mode="mirage", scheduler="temporal", prefix_sharing=True)
+
+    def trace():
+        return multi_turn_trace(
+            [ConversationSpec(A, num_sessions=8, turns=3,
+                              system_prompt_len=256, user_len=32,
+                              assistant_len=64, max_new_tokens=32,
+                              think_time=1.0, session_rate=2.0)], seed=3)
+
+    mets, stats = {}, {}
+    for fast in (False, True):
+        fc = FleetPrefixCache(page_size=32)
+        group = ReplicaGroup.from_config(
+            config(), 4, backend="sim", router=Router("prefix_affinity"),
+            fleet_cache=fc, fast=fast, hw=hw)
+        group.run(trace())
+        mets[fast] = group.metrics()
+        stats[fast] = fc.stats
+    assert_metrics_identical(mets[False], mets[True], f"fleet {link}")
+    assert stats[False] == stats[True]
+    assert mets[False]._fleet_lookup_tokens > 0
+
+
 # --------------------------------------------------------- random traces
 def _requests_from_shape(shape, seed=0):
     """Lower a hypothesis-drawn shape into Request objects: per-request
