@@ -1176,9 +1176,227 @@ def fig26_fleet_prefix(out_json: str = None):
     return rows
 
 
+# ------------------------------------------------ elastic fleet autoscaling
+def fig27_autoscaling(out_json: str = None):
+    """Elastic fleet autoscaling on replayed traces: scaling policy x
+    workload {Azure sample, BurstGPT sample, diurnal synth} x host-link
+    class, on the fast simulator path. Reactive policies (target-
+    utilization hysteresis, SLO-slack-driven) against the static
+    baselines (min fleet n=1, max fleet n=3) and a fixed schedule on the
+    diurnal trace; every membership change runs the remap-aware
+    drain-before-teardown sequence. Reports latency-tier p99 TTFT/TBT,
+    replica-hours, and shed rate — conservation (zero requests lost
+    across every scale-in) is ASSERTED per cell, as are the headline
+    claims: the slack policy beats static-min latency-tier p99 TTFT on a
+    replayed trace while spending fewer replica-hours than static-max,
+    and pre-warmed scale-out joins serve a higher first-window prefix
+    hit rate than cold joins. Writes BENCH_autoscaling.json."""
+    import json
+    import os
+
+    from benchmarks.common import frac
+    from repro.cluster import (
+        Autoscaler, FleetPrefixCache, ReplicaGroup, Router, SchedulePolicy,
+        SLOSlackPolicy, TargetUtilizationPolicy,
+    )
+    from repro.configs import ARCHS
+    from repro.serving import (
+        BEST_EFFORT, LATENCY, ReplaySpec, RuntimeConfig, SLOSpec, TenantSpec,
+    )
+    from repro.serving.traces import (
+        ConversationSpec, DiurnalSpec, multi_turn_trace,
+    )
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    A, B = "llama3-8b", "h2o-danube-3-4b"
+    MAX_FLEET = 3
+
+    def config(hw, trace_a, trace_b):
+        return RuntimeConfig(
+            tenants={
+                A: TenantSpec(ARCHS[A], max_batch=16,
+                              mem_fraction=frac(A, 1.5, hw),
+                              slo=SLOSpec(ttft_target=10.0, tbt_target=0.2,
+                                          tier=LATENCY), trace=trace_a),
+                B: TenantSpec(ARCHS[B], max_batch=16,
+                              mem_fraction=frac(B, 1.0, hw),
+                              slo=SLOSpec(ttft_target=30.0, tbt_target=0.6,
+                                          tier=BEST_EFFORT), trace=trace_b),
+            },
+            mode="mirage", scheduler="slo")
+
+    def traces(hw):
+        azure = os.path.join(here, "traces", "azure_llm_sample.csv")
+        burst = os.path.join(here, "traces", "burstgpt_sample.csv")
+        cap = dict(max_prompt_tokens=2048, max_output_tokens=256)
+        return {
+            "azure": (ReplaySpec(A, azure, time_scale=0.05, **cap),
+                      ReplaySpec(B, azure, time_scale=0.05, **cap)),
+            "burstgpt": (ReplaySpec(A, burst, time_scale=0.05, **cap),
+                         ReplaySpec(B, burst, time_scale=0.05, **cap)),
+            "diurnal": (DiurnalSpec(A, "sharegpt", 14.0, duration=60.0,
+                                    period=30.0, duty=0.5),
+                        DiurnalSpec(B, "sharegpt", 10.0, duration=60.0,
+                                    period=30.0, duty=0.5, phase=15.0)),
+        }
+
+    def scaler(policy_name):
+        kw = dict(min_replicas=1, max_replicas=MAX_FLEET, window=4.0,
+                  cooldown=6.0, prewarm=True)
+        if policy_name == "util":
+            return Autoscaler(policy=TargetUtilizationPolicy(
+                target_inflight=12.0), **kw)
+        if policy_name == "slack":
+            return Autoscaler(policy=SLOSlackPolicy(
+                slack_out=2.0, slack_in=9.0), **kw)
+        if policy_name == "sched":
+            # the diurnal operator's hand-tuned plan: max fleet for the ON
+            # phases, min fleet across the OFF valleys
+            return Autoscaler(policy=SchedulePolicy(
+                steps=[(0.0, MAX_FLEET), (15.0, 1), (30.0, MAX_FLEET),
+                       (45.0, 1)]), **kw)
+        return None
+
+    def run_cell(link, workload, policy_name):
+        hw = GH200.with_host_link(link)
+        ta, tb = traces(hw)[workload]
+        cfg = config(hw, ta, tb)
+        n0 = {"static1": 1, "static3": MAX_FLEET}.get(policy_name, 1)
+        group = ReplicaGroup.from_config(
+            cfg, n0, backend="sim", router=Router("slack_aware"),
+            coordinate=True, autoscaler=scaler(policy_name), fast=True,
+            hw=hw)
+        reqs = cfg.trace(seed=0)
+        group.submit(list(reqs))
+        while group.busy() and group.ticks < 10_000_000:
+            group.tick()
+        met = group.metrics()
+        lat = group.tier_metrics()[LATENCY]
+        # conservation across every membership change: nothing lost, shed
+        # rate identically zero (the in-benchmark acceptance assertion)
+        assert group.finished_count == len(reqs), \
+            f"{link}/{workload}/{policy_name}: lost requests"
+        assert met.unfinished == 0
+        scale_events = sum(1 for _, k, _u in group.events
+                           if k in ("join", "leave"))
+        return {
+            "host_link": link, "workload": workload, "policy": policy_name,
+            "requests": len(reqs),
+            "lat_p99_ttft_s": lat.p99_ttft, "lat_p99_tbt_s": lat.p99_tbt,
+            "replica_hours": group.replica_seconds / 3600.0,
+            "shed_rate": met.unfinished / max(len(reqs), 1),
+            "scale_events": scale_events,
+            "final_replicas": len(group.replicas),
+        }
+
+    rows, record = [], []
+    for link in ("nvlink_c2c", "pcie5"):
+        for workload in ("azure", "burstgpt", "diurnal"):
+            policies = ["static1", "static3", "util", "slack"]
+            if workload == "diurnal":
+                policies.append("sched")
+            for policy_name in policies:
+                cell = run_cell(link, workload, policy_name)
+                record.append(cell)
+                rows.append(["fig27", link, workload, policy_name,
+                             cell["lat_p99_ttft_s"], cell["lat_p99_tbt_s"],
+                             round(cell["replica_hours"], 6),
+                             cell["shed_rate"], cell["scale_events"]])
+    emit(rows, ["bench", "link", "workload", "policy", "lat_p99_ttft_s",
+                "lat_p99_tbt_s", "replica_hours", "shed_rate",
+                "scale_events"])
+
+    # headline claim: on >= 1 replayed trace the slack policy beats the
+    # static min fleet on latency-tier p99 TTFT while spending fewer
+    # replica-hours than the static max fleet
+    def cell(link, wl, pol):
+        return next(r for r in record if r["host_link"] == link
+                    and r["workload"] == wl and r["policy"] == pol)
+
+    wins = []
+    for link in ("nvlink_c2c", "pcie5"):
+        for wl in ("azure", "burstgpt"):
+            s, lo, hi = (cell(link, wl, p)
+                         for p in ("slack", "static1", "static3"))
+            if s["lat_p99_ttft_s"] < lo["lat_p99_ttft_s"] and \
+                    s["replica_hours"] < hi["replica_hours"]:
+                wins.append([link, wl,
+                             s["lat_p99_ttft_s"], lo["lat_p99_ttft_s"],
+                             s["replica_hours"], hi["replica_hours"]])
+    assert wins, "slack policy never beat static-min within the " \
+                 "static-max replica-hour budget on a replayed trace"
+
+    # pre-warm claim: a scripted scale-out on multi-turn traffic — the
+    # pre-warmed joiner must serve a higher first-window prefix hit rate
+    # than an identical cold joiner. pcie4 + short shared spans: the
+    # at-dispatch transfer-vs-recompute call goes against fetching (the
+    # latency floor dominates short spans), so a COLD joiner recomputes
+    # and misses locally — exactly the regime where the pre-warm, which
+    # deliberately imports regardless of that per-request call (paid
+    # before traffic, not under it), shows up as first-window hit rate
+    def prewarm_probe(prewarm):
+        hw = GH200.with_host_link("pcie4")
+        cfg = RuntimeConfig(
+            tenants={A: TenantSpec(ARCHS[A], max_batch=8,
+                                   mem_fraction=frac(A, 1.0, hw))},
+            mode="mirage", scheduler="temporal", prefix_sharing=True)
+        fc = FleetPrefixCache(page_size=32)
+        group = ReplicaGroup.from_config(
+            cfg, 2, backend="sim", router=Router("prefix_affinity"),
+            fleet_cache=fc, fast=True, hw=hw)
+        reqs = multi_turn_trace(
+            [ConversationSpec(A, num_sessions=24, turns=5,
+                              system_prompt_len=64, user_len=16,
+                              assistant_len=32, max_new_tokens=16,
+                              think_time=2.0, session_rate=2.0)], seed=3)
+        group.submit(reqs)
+        joined = False
+        while group.busy() and group.ticks < 10_000_000:
+            group.tick()
+            if not joined and group._wall > 6.0:
+                group.add_replica(prewarm=prewarm)
+                joined = True
+        assert joined and group.finished_count == len(reqs)
+        return group.replicas[-1].metrics().prefix_hit_rate
+
+    cold, warm = prewarm_probe(False), prewarm_probe(True)
+    assert warm > cold, \
+        f"pre-warmed join hit rate {warm} not above cold {cold}"
+    print(f"# prewarm first-window hit rate: cold {cold:.3f} "
+          f"-> warm {warm:.3f}")
+
+    path = out_json or os.path.join(here, "BENCH_autoscaling.json")
+    with open(path, "w") as f:
+        json.dump({
+            "bench": "fig27_autoscaling",
+            "workload": "Azure + BurstGPT sample replays (time_scale=0.05) "
+                        "and a 60s diurnal synth, 2 SLO-tiered tenants, "
+                        "slack_aware router + coordinated remap, policies "
+                        "{static1, static3, util, slack, sched} x host "
+                        "links {nvlink_c2c, pcie5}, fast sim path",
+            "rows": record,
+            "claims": {
+                "conservation": "asserted per cell: every submitted "
+                                "request finished exactly once across all "
+                                "membership changes (shed_rate == 0)",
+                "slack_beats_static_min_within_max_budget": wins,
+                "prewarm_first_window_hit_rate": {
+                    "cold": cold, "warm": warm},
+            },
+            "headline": "SLO-slack autoscaling beats the static min fleet "
+                        "on latency-tier p99 TTFT on replayed traces at "
+                        "fewer replica-hours than the static max fleet; "
+                        "zero requests lost across every scale-in; "
+                        "pre-warmed joins start warmer than cold joins",
+        }, f, indent=2)
+    print(f"# wrote {path}")
+    return rows
+
+
 ALL = [fig8_temporal, fig9_varied_rates, fig10_varied_inputs, fig11_mru_lru,
        fig12_spatial, fig13_strict_isolation, fig14_swap_vs_remap,
        fig15_layer_selection, fig16_dynamic_reversion, fig17_remap_cap,
        fig18_prefix_sharing, fig19_chunked_prefill, fig20_slo_tiers,
        fig21_async_pipeline, fig22_multi_replica, fig23_expert_remap,
-       fig24_shard_sets, fig25_trace_replay, fig26_fleet_prefix]
+       fig24_shard_sets, fig25_trace_replay, fig26_fleet_prefix,
+       fig27_autoscaling]

@@ -1,9 +1,13 @@
 """Multi-replica cluster layer over the ``ServingRuntime`` protocol."""
+from repro.cluster.autoscaler import (
+    Autoscaler, FleetSignal, ScalingPolicy, SchedulePolicy, SLOSlackPolicy,
+    TargetUtilizationPolicy,
+)
 from repro.cluster.fleet_prefix_cache import (
     FleetMatch, FleetPrefixCache, FleetStats,
 )
 from repro.cluster.policy import CoordinatedRemapPolicy
-from repro.cluster.replica_group import ReplicaGroup
+from repro.cluster.replica_group import ACTIVE, LEAVING, ReplicaGroup, WARMING
 from repro.cluster.router import (
     LEAST_LOADED, PREFIX_AFFINITY, POLICIES, SLACK_AWARE, Router,
 )

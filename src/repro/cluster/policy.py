@@ -98,3 +98,25 @@ class CoordinatedRemapPolicy:
                 granted += 1
         for rt, on in zip(replicas, enabled):
             rt.set_reversion_enabled(on)
+
+    def on_remove(self, idx: int, n: int) -> None:
+        """Advance the sticky cursor past a departed unit (``idx`` is the
+        position removed from a fleet of ``n``). Without this the cursor
+        can keep pointing at the departed unit's old index: after the
+        group renumbers, the grant lands on whichever unit inherited the
+        index — or, worse, ``_grant % n`` aliases onto a unit that is
+        mid-drain — and the lease bookkeeping stalls reversion fleet-wide.
+        The departed holder's grant passes to its successor (which holds
+        the same position after the shift); cursors past the removal
+        point shift down with their units."""
+        if n <= 1:
+            self._grant = 0
+            self._held = 0
+            return
+        g = self._grant % n
+        if g == idx:
+            # holder departed: the successor inherits a fresh lease
+            self._held = 0
+        elif g > idx:
+            g -= 1
+        self._grant = g % (n - 1)

@@ -64,20 +64,35 @@ class Router:
             raise ValueError(f"unknown router policy {self.policy!r}")
 
     def route(self, req: Request, replicas: Sequence,
-              prefer=None) -> int:
+              prefer=None, routable=None) -> int:
         """Pick the replica for ``req`` and record the assignment.
         ``prefer`` is an optional set of replica indices the fleet prefix
         cache reports as warm for this prompt — consulted by the
         ``prefix_affinity`` policy before assignment (other policies
         ignore the hint; the fetch path still serves them after routing).
-        Draining replicas stay excluded: a warm-but-draining holder loses
-        to the normal policy pick (the drain-aware fallback)."""
-        avail = [i for i, rt in enumerate(replicas) if not rt.draining()] \
-            or list(range(len(replicas)))
+        ``routable`` restricts the candidate pool to those indices (the
+        replica group passes the ACTIVE members of a dynamic fleet;
+        ``None`` = all, the historical behaviour bit for bit). Draining
+        replicas stay excluded: a warm-but-draining holder loses to the
+        normal policy pick (the drain-aware fallback)."""
+        pool = list(routable) if routable is not None \
+            else list(range(len(replicas)))
+        avail = [i for i in pool if not replicas[i].draining()] or pool
         i = avail[0] if len(avail) == 1 \
             else self._pick(req, replicas, avail, prefer)
         self.assignments[req.rid] = i
         return i
+
+    def forget_replica(self, idx: int) -> None:
+        """Purge the audit map of a removed replica and renumber the
+        survivors (the group deletes position ``idx`` from its list, so
+        every later index shifts down by one). Without this, stale
+        entries keep pointing at dead or renumbered replicas and any
+        consumer reading the map after scale-in — audits, seed-stability
+        comparisons — attributes requests to the wrong unit."""
+        self.assignments = {
+            rid: (i - 1 if i > idx else i)
+            for rid, i in self.assignments.items() if i != idx}
 
     # ------------------------------------------------------------ policies
     def _pick(self, req: Request, replicas: Sequence,

@@ -99,6 +99,18 @@ class ShardSet:
                       kv=None) -> int:
         return self.runtime.import_prefix(model, tokens, n_tokens, kv=kv)
 
+    def prefix_snapshot(self, max_blocks: int = 0):
+        return self.runtime.prefix_snapshot(max_blocks)
+
+    # replica lifecycle: the whole set joins/leaves atomically, so the
+    # respill and the forced teardown reversion delegate as one thing
+    # (the sharded drain inside stays lock-step — ``ShardedPlanDrain``)
+    def withdraw_pending(self) -> List[Request]:
+        return self.runtime.withdraw_pending()
+
+    def drain_for_removal(self) -> None:
+        self.runtime.drain_for_removal()
+
     # ------------------------------------------------------------ extras
     @property
     def partial_drain_ticks(self) -> int:

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import math
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 #: hex chars kept of each chained SHA-256 block digest — 64 bits, plenty
@@ -292,6 +293,39 @@ class PrefixIndex:
                     freed.append(nd.page)
                     progress = True
         return freed
+
+    # ------------------------------------------------------------ snapshot
+    def paths(self, max_blocks: Optional[int] = None
+              ) -> List[Tuple[int, ...]]:
+        """Token streams of every *maximal* cached prefix (root-to-leaf
+        paths), non-mutating — no clock tick, no ``last_use`` refresh, no
+        stats. Deterministic order: paths sorted by the leaf's insertion
+        ``seq``, so two identically-driven indices snapshot identically.
+        ``max_blocks`` bounds the total blocks across returned paths (a
+        pre-warm transfer budget); a path that would overflow it is
+        skipped, not truncated mid-chain."""
+        leaves: List[Tuple[int, PrefixNode]] = []
+        stack = list(self.root.children.values())
+        while stack:
+            nd = stack.pop()
+            if nd.is_leaf():
+                leaves.append((nd.seq, nd))
+            else:
+                stack.extend(nd.children.values())
+        leaves.sort()
+        out: List[Tuple[int, ...]] = []
+        budget = math.inf if max_blocks is None else max(max_blocks, 0)
+        for _seq, leaf in leaves:
+            blocks: List[Tuple[int, ...]] = []
+            nd = leaf
+            while nd is not self.root:
+                blocks.append(nd.block)
+                nd = nd.parent
+            if len(blocks) > budget:
+                continue
+            budget -= len(blocks)
+            out.append(tuple(t for blk in reversed(blocks) for t in blk))
+        return out
 
     # ------------------------------------------------------------- integrity
     def check_invariants(self) -> None:

@@ -34,7 +34,7 @@ from repro.configs.base import ModelConfig, RuntimeConfig
 from repro.core import (
     ControllerConfig, MetadataStore, MemoryInfo, ModelInfo,
     PagedKVAllocator, PrefixIndex, RemapDecision, RemappingController,
-    TransferEngine,
+    TransferEngine, identity_plan,
 )
 from repro.models import build_model
 from repro.models.common import tree_bytes
@@ -454,6 +454,60 @@ class ServingEngine:
         self.events.append((self.step_idx, "prefix-import",
                             f"{model} blocks={len(new_pages)}"))
         return len(new_pages) * ps
+
+    def prefix_snapshot(self, max_blocks: int = 0):
+        """Every maximal cached prefix as ``(model, tokens)`` pairs — the
+        donor side of scale-out pre-warm (non-mutating; ``max_blocks``
+        bounds the total blocks, 0 = unbounded). The joining replica
+        imports each span through ``export_prefix``/``import_prefix``, so
+        the real KV pages cross with it."""
+        out = []
+        budget = max_blocks if max_blocks > 0 else None
+        for n, idx in self.prefix.items():
+            paths = idx.paths(budget)
+            if budget is not None:
+                budget -= sum(len(p) // idx.page_size for p in paths)
+            out.extend((n, p) for p in paths)
+        return out
+
+    # ------------------------------------------- replica lifecycle hooks
+    def withdraw_pending(self) -> List[Request]:
+        """Pull back every submitted-but-not-yet-admitted arrival so the
+        cluster layer can respill it to another replica at scale-in.
+        Requests already admitted (queued/running) finish here."""
+        out = list(self._incoming)
+        self._incoming.clear()
+        return out
+
+    def drain_for_removal(self) -> None:
+        """Force reversion of every donated parameter segment before
+        teardown (the drain-before-teardown invariant): pages are
+        released back level by level — exactly the controller's one-step
+        revert semantics, including the cached-prefix drop and the
+        pages-in-use undo — and the restored layers' host->device traffic
+        drains through the TransferEngine one unit per step. Idempotent;
+        call once the replica's inflight work is gone."""
+        if self.mode != "mirage":
+            return
+        for name, info in self.store.models.items():
+            progressed = False
+            while info.remapped_alpha > 0:
+                target = info.remapped_alpha - 1
+                self.store.apply_remap(name, target)
+                d = RemapDecision(name, target,
+                                  identity_plan(info.num_layers),
+                                  reverted=True)
+                out = execute_remap_decision(
+                    self.allocator, self.store, self._elastic_pages, d,
+                    drop_cached=self._drop_cached_in_segments
+                    if self.prefix else None)
+                if out == "undone":
+                    break       # pages still in use: retry next tick
+                progressed = True
+            if progressed:
+                self.xfer.submit_plan(name, identity_plan(info.num_layers))
+                self.events.append(
+                    (self.step_idx, "revert-teardown", name))
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
         while self.step_idx < max_steps and self.busy():

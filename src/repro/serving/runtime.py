@@ -107,6 +107,16 @@ class ServingRuntime(Protocol):
     def import_prefix(self, model: str, tokens, n_tokens: int,
                       kv=None) -> int: ...
 
+    def prefix_snapshot(self, max_blocks: int = 0): ...
+
+    # replica lifecycle (cluster/autoscaler.py): respill un-admitted
+    # arrivals at scale-in, and force reversion of donated parameter
+    # memory before the replica's KV is torn down (the cluster-level
+    # drain-before-teardown invariant)
+    def withdraw_pending(self) -> List[Request]: ...
+
+    def drain_for_removal(self) -> None: ...
+
 
 def scale_slo(slo: SLOSpec, k: float) -> SLOSpec:
     """Convert an SLOSpec between clocks (seconds -> engine steps):

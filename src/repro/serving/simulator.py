@@ -418,12 +418,74 @@ class Simulator:
             self.prefix_fetched_tokens += got
         return got
 
+    def prefix_snapshot(self, max_blocks: int = 0):
+        """Every maximal cached prefix as ``(model, tokens)`` pairs — the
+        donor side of scale-out pre-warm (the joining replica imports the
+        spans through ``import_prefix``, charging real link bytes).
+        Non-mutating. ``max_blocks`` bounds total blocks (0 = unbounded)."""
+        out = []
+        budget = max_blocks if max_blocks > 0 else None
+        for n, t in self.tenants.items():
+            if t.index is None:
+                continue
+            paths = t.index.paths(budget)
+            if budget is not None:
+                budget -= sum(len(p) // t.index.page_size for p in paths)
+            out.extend((n, p) for p in paths)
+        return out
+
     def prefix_stats(self):
         """Per-tenant prefix-cache counters (engine-shaped; empty when
         sharing is off)."""
         return {n: dataclasses.asdict(t.index.stats)
                 | {"cached_blocks": t.index.num_blocks}
                 for n, t in self.tenants.items() if t.index is not None}
+
+    # ------------------------------------------- replica lifecycle hooks
+    def withdraw_pending(self) -> List[Request]:
+        """Pull back every submitted-but-not-yet-admitted arrival (the
+        unconsumed tail of the arrival list) so the cluster layer can
+        respill it to another replica at scale-in. Requests already
+        admitted (queued/prefilling/running) stay: they finish here
+        before teardown."""
+        out = self._arrivals[self._arr_pos:]
+        del self._arrivals[self._arr_pos:]
+        return out
+
+    def drain_for_removal(self) -> None:
+        """Force reversion of every donated parameter segment: the
+        cluster-level drain-before-teardown invariant (a replica must
+        return its tenants' remapped layers to residency — the restore
+        bytes crossing its host link like any Dynamic Reversion — before
+        its KV is torn down; ``MetadataStore.deregister`` refuses while
+        ``remapped_alpha > 0``). Idempotent: models already at identity
+        with no in-flight drain are untouched."""
+        if self.mode != "mirage":
+            return
+        for name in self.tenants:
+            target = identity_plan(self.store.models[name].num_layers)
+            inflight = self._drains.get(name)
+            if inflight is not None and inflight.target == target:
+                continue        # teardown drain already in flight
+            cur = self._current_plan(name)
+            if cur == target and inflight is None \
+                    and self.store.models[name].remapped_alpha == 0:
+                continue
+            if self.store.models[name].remapped_alpha:
+                self.store.apply_remap(name, 0)
+            if self.shard_devices > 1:
+                drain = ShardedPlanDrain(
+                    cur, target, self._unit_bytes(name),
+                    shards=self.shard_devices,
+                    lockstep=self.shard_lockstep)
+            else:
+                drain = PlanDrain(cur, target, self._unit_bytes(name))
+            if drain.done:
+                self._drains.pop(name, None)
+                self._live_plan[name] = target
+            else:
+                self._drains[name] = drain
+            self._cold[name] = True
 
     def tick(self) -> float:
         """One scheduling iteration; returns the elapsed simulated

@@ -1,0 +1,412 @@
+"""Elastic fleet membership and the autoscaler.
+
+Covers the ReplicaGroup state machine (warming joins with fleet-cache
+pre-warm, leaving units with respill + the remap-aware drain-before-
+teardown sequence, retired-unit metrics merge = request conservation),
+the forced-reversion hooks on both backends, the engine-backed fleet run
+with a fleet prefix cache across a membership change, and the scaling
+policies (hysteresis, slack thresholds, schedule baseline, cooldown,
+victim selection).
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    ACTIVE, Autoscaler, FleetPrefixCache, FleetSignal, LEAVING,
+    ReplicaGroup, Router, SchedulePolicy, SLOSlackPolicy,
+    TargetUtilizationPolicy, WARMING,
+)
+from repro.configs import ARCHS
+from repro.serving import RuntimeConfig, TenantSpec
+from repro.serving.hw import GH200
+from repro.serving.perf_model import PerfModel
+from repro.serving.request import Request
+from repro.serving.slo import LATENCY, SLOSpec
+from repro.serving.traces import (
+    ConversationSpec, TraceSpec, multi_turn_trace, make_trace,
+)
+
+A = "llama3-8b"
+
+
+def frac(name, kv_gb, hw=GH200):
+    pm = PerfModel(ARCHS[name], hw)
+    return (pm.param_bytes + kv_gb * 2**30) / hw.hbm_bytes
+
+
+def _config(hw=GH200, **kw):
+    return RuntimeConfig(
+        tenants={A: TenantSpec(ARCHS[A], max_batch=8,
+                               mem_fraction=frac(A, 2.0, hw))},
+        mode="mirage", scheduler="temporal", prefix_sharing=True, **kw)
+
+
+def _trace(sessions=8, turns=3, seed=3):
+    return multi_turn_trace(
+        [ConversationSpec(A, num_sessions=sessions, turns=turns,
+                          system_prompt_len=256, user_len=32,
+                          assistant_len=64, max_new_tokens=32,
+                          think_time=1.0, session_rate=2.0)], seed=seed)
+
+
+def _drive(group, trace, script=()):
+    """Run a group over a trace executing (wall_time, fn) membership ops
+    once each as the fleet clock passes them."""
+    group.submit(trace)
+    pending = sorted(script, key=lambda s: s[0])
+    while group.busy() and group.ticks < 1_000_000:
+        group.tick()
+        while pending and group._wall > pending[0][0]:
+            pending.pop(0)[1](group)
+    assert not pending, "membership script did not fully execute"
+    return group.metrics()
+
+
+# --------------------------------------------------- sim membership machine
+def test_scale_out_and_in_conserves_requests():
+    """Join (pre-warmed) then leave across a live trace: every submitted
+    request finishes exactly once (retired units keep their books), the
+    fleet index forgets the departed holder, and the router's audit map
+    is renumbered to the surviving fleet."""
+    fc = FleetPrefixCache(page_size=32)
+    g = ReplicaGroup.from_config(_config(), 2, backend="sim",
+                                 router=Router("least_loaded"),
+                                 fleet_cache=fc)
+    trace = _trace()
+    met = _drive(g, trace, script=[
+        (2.0, lambda g: g.add_replica(prewarm=True)),
+        (5.0, lambda g: g.remove_replica(0)),
+    ])
+    assert g.finished_count == len(trace)
+    assert met.unfinished == 0
+    assert len(g.replicas) == 2 and g.uids == [1, 2]
+    assert g.states == [ACTIVE, ACTIVE]
+    kinds = [k for _, k, _ in g.events]
+    assert kinds == ["join", "active", "leave", "gone"]
+    # the departed uid holds nothing in the fleet index
+    assert all(0 not in e.holders for e in fc._entries.values())
+    # audit map renumbered to the 2-replica survivor fleet
+    assert set(g.router.assignments.values()) <= {0, 1}
+    # leave/gone ordering: teardown never precedes the leave event
+    times = {k: t for t, k, _ in g.events}
+    assert times["gone"] >= times["leave"]
+    assert g.replica_seconds > 0
+
+
+def test_prewarmed_join_beats_cold_join_on_hit_rate():
+    """The acceptance claim at test scale: a pre-warmed joiner's local
+    prefix hit rate over its serving life beats a cold joiner's on the
+    same trace, and the pre-warm moved real bytes through the fleet
+    cache's transfer accounting."""
+    rates, bytes_moved = {}, {}
+    for prewarm in (False, True):
+        fc = FleetPrefixCache(page_size=32)
+        g = ReplicaGroup.from_config(_config(), 2, backend="sim",
+                                     router=Router("prefix_affinity"),
+                                     fleet_cache=fc)
+        before = fc.stats.fetch_bytes
+        _drive(g, _trace(sessions=12), script=[
+            (3.0, lambda g, p=prewarm: g.add_replica(prewarm=p)),
+        ])
+        joined = g.replicas[-1]
+        assert g.uids[-1] == 2
+        rates[prewarm] = joined.metrics().prefix_hit_rate
+        bytes_moved[prewarm] = fc.stats.fetch_bytes - before
+    assert bytes_moved[True] > bytes_moved[False]
+    assert rates[True] > rates[False]
+
+
+def test_scale_in_forces_reversion_of_remapped_layers():
+    """Drain-before-teardown: a leaving replica whose tenants donated
+    parameter layers to KV must revert them (host-link drain) before the
+    group finalizes the removal — the store must show zero remapped bytes
+    on the retired unit, never a torn-down replica with layers still
+    donated."""
+    cfg = RuntimeConfig(
+        tenants={A: TenantSpec(ARCHS[A], max_batch=32,
+                               mem_fraction=frac(A, 0.45))},
+        mode="mirage", scheduler="temporal")
+    g = ReplicaGroup.from_config(cfg, 2, backend="sim")
+    trace = make_trace([TraceSpec(A, "sharegpt", 12.0, duration=6.0)],
+                       seed=3)
+    g.submit(trace)
+    removed = False
+    while g.busy() and g.ticks < 1_000_000:
+        g.tick()
+        if not removed and g.replicas[0].store.total_remapped_bytes() > 0:
+            victim_store = g.replicas[0].store
+            busy_before = g.replicas[0].host_link_busy_s
+            g.remove_replica(0)
+            removed = True
+    assert removed, "pressure never remapped the victim"
+    assert g.finished_count == len(trace)
+    assert len(g.replicas) == 1
+    # the retired unit reverted everything before teardown...
+    assert victim_store.total_remapped_bytes() == 0
+    retired = g._retired[0]
+    assert not retired.draining()
+    # ...and the reversion drained real bytes over its host link
+    assert retired.host_link_busy_s > busy_before
+
+
+def test_sim_drain_for_removal_is_idempotent():
+    """Repeated drain_for_removal calls (the group issues one per round
+    while a unit is leaving) must not restart the in-flight teardown
+    drain — progress is monotonic."""
+    cfg = RuntimeConfig(
+        tenants={A: TenantSpec(ARCHS[A], max_batch=32,
+                               mem_fraction=frac(A, 0.45))},
+        mode="mirage", scheduler="temporal")
+    sim = cfg.build("sim", dynamic_reversion=False)
+    sim.run(make_trace([TraceSpec(A, "sharegpt", 12.0, duration=5.0)],
+                       seed=3))
+    assert sim.store.total_remapped_bytes() > 0   # calm: still donated
+    sim.drain_for_removal()
+    assert sim.store.total_remapped_bytes() == 0  # books revert up front
+    drain = sim._drains[A]
+    sim.drain_for_removal()                       # second call: no restart
+    assert sim._drains[A] is drain
+    guard = 0
+    while sim.draining() and guard < 100_000:
+        sim.tick()
+        guard += 1
+    assert not sim.draining()
+    from repro.core import identity_plan
+    assert sim._current_plan(A) == \
+        identity_plan(sim.store.models[A].num_layers)
+
+
+def test_remove_replica_guards():
+    g = ReplicaGroup.from_config(_config(), 2, backend="sim")
+    with pytest.raises(IndexError):
+        g.remove_replica(5)
+    g.remove_replica(0)
+    with pytest.raises(ValueError, match="not active"):
+        g.remove_replica(0)                      # already leaving
+    with pytest.raises(ValueError, match="last active"):
+        g.remove_replica(1)
+    # direct-constructed groups cannot mint replicas from thin air
+    g2 = ReplicaGroup([_config().build("sim")])
+    with pytest.raises(ValueError, match="from_config"):
+        g2.add_replica()
+
+
+def test_static_fleet_stays_static():
+    """No membership op -> the dynamic machinery never engages: no
+    events, identical uids/indices, and the group reports all-active."""
+    g = ReplicaGroup.from_config(_config(), 2, backend="sim")
+    g.run(_trace(sessions=4, turns=2))
+    assert not g._dynamic
+    assert g.events == []
+    assert g.uids == [0, 1]
+    assert g.states == [ACTIVE, ACTIVE]
+    assert g.finished_count == len(_trace(sessions=4, turns=2))
+
+
+# ------------------------------------------------------ engine-backed fleet
+@pytest.fixture(scope="module")
+def engine_fleet_config():
+    import jax
+
+    from repro.configs import scaled_config
+    from repro.models import build_model
+
+    cfg = scaled_config(ARCHS[A], num_layers=2)
+    return RuntimeConfig(
+        tenants={"m": TenantSpec(
+            cfg, params=build_model(cfg).init(jax.random.PRNGKey(0)),
+            max_batch=4, max_context=64, paged=True)},
+        prefix_sharing=True, quantum_steps=4)
+
+
+def _engine_trace(n=10, shared=24, arrival_gap=40.0):
+    """Shared-system-prompt requests spread widely enough that later
+    arrivals land after a mid-run membership change."""
+    sys_p = np.arange(1, shared + 1, dtype=np.int32)
+    return [Request(f"r{i}", "m",
+                    np.concatenate([sys_p,
+                                    np.full(4, 100 + i, np.int32)]),
+                    max_new_tokens=4, arrival=i * arrival_gap)
+            for i in range(n)]
+
+
+def test_engine_fleet_membership_run(engine_fleet_config):
+    """Engine-backed ReplicaGroup with a fleet prefix cache across a
+    scale-out AND a scale-in: request conservation holds, fleet hit-rate
+    accounting keeps counting across the membership change, and the
+    departed holder vanishes from the index while the joiner (a fresh
+    uid) appears."""
+    mk = lambda: engine_fleet_config.build("engine", base_kv_pages=64,
+                                           page_size=4)
+    fc = FleetPrefixCache(page_size=4)
+    g = ReplicaGroup([mk(), mk()], router=Router("least_loaded"),
+                     fleet_cache=fc)
+    trace = _engine_trace()
+    g.submit(trace)
+    added = removed = False
+    while g.busy() and g.ticks < 50_000:
+        g.tick()
+        if not added and g.finished_count >= 2:
+            g.add_replica(mk(), prewarm=True)
+            added = True
+        if added and not removed and g.n_active == 3:
+            g.remove_replica(0)
+            removed = True
+    assert added and removed
+    met = g.metrics()
+    assert g.finished_count == len(trace)
+    assert met.unfinished == 0
+    assert g.uids == [1, 2]
+    # fleet accounting: lookups kept flowing after the change, and the
+    # pre-warm (or a later fetch) moved tokens through the data plane
+    assert fc.stats.lookups >= len(trace)
+    assert met.fleet_hit_rate > 0
+    assert fc.stats.transferred_tokens > 0
+    holders = set().union(*(e.holders for e in fc._entries.values())) \
+        if fc._entries else set()
+    assert 0 not in holders                     # dropped at teardown
+    assert set(g.router.assignments.values()) <= {0, 1}
+
+
+def test_engine_drain_for_removal_reverts():
+    """Engine hook: after a remap donated layers to KV, the forced
+    reversion restores every layer level-by-level and streams the bytes
+    back through the TransferEngine until the plan is identity."""
+    import jax
+
+    from repro.configs import scaled_config
+    from repro.configs.base import RuntimeConfig as EngineKnobs
+    from repro.models import build_model
+    from repro.serving import ServingEngine, TenantConfig
+    from repro.serving.traces import tiny_trace
+
+    cfg_a = scaled_config(ARCHS[A], num_layers=4)
+    cfg_b = scaled_config(ARCHS["h2o-danube-3-4b"], num_layers=4)
+    eng = ServingEngine(
+        {"A": TenantConfig(cfg_a,
+                           build_model(cfg_a).init(jax.random.PRNGKey(0)),
+                           max_batch=4, max_context=32),
+         "B": TenantConfig(cfg_b,
+                           build_model(cfg_b).init(jax.random.PRNGKey(1)),
+                           max_batch=4, max_context=32)},
+        mode="mirage", scheduler="temporal", base_kv_pages=6, page_size=4,
+        quantum_steps=4, runtime=EngineKnobs(dynamic_reversion=False))
+    eng.submit(tiny_trace(["A", "B"], n_per_model=4, prompt_len=10,
+                          max_new=8, vocab=256))
+    eng.run(max_steps=2_000)
+    assert any(k == "remap" for _, k, _d in eng.events), "no remap fired"
+    assert eng.store.total_remapped_bytes() > 0
+    eng.drain_for_removal()
+    assert eng.store.total_remapped_bytes() == 0
+    assert any(k == "revert-teardown" for _, k, _d in eng.events)
+    guard = 0
+    while eng.draining() and guard < 10_000:
+        eng.step()
+        guard += 1
+    assert not eng.draining()
+    eng.drain_for_removal()                     # idempotent once clean
+    assert eng.store.total_remapped_bytes() == 0
+    eng.allocator.check_invariants()
+
+
+# ------------------------------------------------------------- the policies
+def _sig(now, inflight=0, slack=math.inf, backlog=0, active=2):
+    return FleetSignal(now=now, inflight=inflight, pressure=0.0,
+                       min_slack=slack, backlog=backlog, active=active)
+
+
+def test_target_utilization_hysteresis():
+    pol = TargetUtilizationPolicy(target_inflight=8.0)
+    hot = [_sig(t, inflight=24, active=2) for t in range(5)]
+    assert pol.desired(hot, 2) == 3             # 12/replica > 10
+    cold = [_sig(t, inflight=2, active=2) for t in range(5)]
+    assert pol.desired(cold, 2) == 1            # 1/replica < 4
+    band = [_sig(t, inflight=16, active=2) for t in range(5)]
+    assert pol.desired(band, 2) == 2            # inside the band: hold
+    # backlog anywhere in the window vetoes scale-in
+    cold[0] = _sig(0, inflight=2, backlog=3, active=2)
+    assert pol.desired(cold, 2) == 2
+
+
+def test_slo_slack_policy_thresholds():
+    pol = SLOSlackPolicy(slack_out=0.5, slack_in=4.0)
+    tight = [_sig(t, slack=5.0) for t in range(4)] + [_sig(4, slack=0.2)]
+    assert pol.desired(tight, 2) == 3           # windowed min dipped
+    calm = [_sig(t, slack=6.0) for t in range(5)]
+    assert pol.desired(calm, 2) == 1            # whole window comfortable
+    mixed = [_sig(t, slack=2.0) for t in range(5)]
+    assert pol.desired(mixed, 2) == 2           # between thresholds: hold
+    backlog = [_sig(t, slack=6.0, backlog=1) for t in range(5)]
+    assert pol.desired(backlog, 2) == 3         # backlog forces growth
+
+
+def test_schedule_policy_steps():
+    pol = SchedulePolicy(steps=[(0.0, 1), (10.0, 3), (20.0, 2)])
+    assert pol.desired([_sig(5.0)], 1) == 1
+    assert pol.desired([_sig(12.0)], 1) == 3
+    assert pol.desired([_sig(25.0)], 3) == 2
+    assert pol.desired([], 2) == 2
+
+
+def test_autoscaler_cooldown_and_clamp():
+    """Driven against a live sim fleet: the scheduled policy asks for an
+    absurd size, the clamp bounds it, and consecutive decisions respect
+    the cooldown."""
+    sc = Autoscaler(policy=SchedulePolicy(steps=[(1.0, 10)]),
+                    min_replicas=1, max_replicas=3, window=5.0,
+                    cooldown=2.0, prewarm=False)
+    g = ReplicaGroup.from_config(_config(), 1, backend="sim",
+                                 autoscaler=sc)
+    g.run(_trace(sessions=6, turns=2))
+    assert len(g.replicas) <= 3                 # clamped
+    outs = [t for t, kind, _ in sc.decisions if kind == "out"]
+    assert outs, "schedule never scaled out"
+    assert all(b - a >= 2.0 for a, b in zip(outs, outs[1:]))
+    assert g.finished_count == len(_trace(sessions=6, turns=2))
+    assert g.metrics().unfinished == 0
+
+
+def test_autoscaler_victim_is_least_loaded_highest_index():
+    class Unit:
+        def __init__(self, load):
+            self._load = load
+
+        def inflight(self):
+            return self._load
+
+    class G:
+        replicas = [Unit(3), Unit(1), Unit(1)]
+        states = [ACTIVE, ACTIVE, ACTIVE]
+
+    assert Autoscaler._victim(G) == 2           # tie -> youngest leaves
+    G.states = [ACTIVE, ACTIVE, LEAVING]
+    assert Autoscaler._victim(G) == 1
+    G.states = [ACTIVE, LEAVING, LEAVING]
+    assert Autoscaler._victim(G) is None        # never the last active
+
+
+def test_autoscaler_slack_policy_end_to_end():
+    """SLO-slack policy over a bursty latency-tier trace grows the fleet
+    under the burst and shrinks it after; conservation holds across
+    every membership change it makes."""
+    hw = GH200
+    cfg = RuntimeConfig(
+        tenants={A: TenantSpec(ARCHS[A], max_batch=8,
+                               mem_fraction=frac(A, 1.0, hw),
+                               slo=SLOSpec(1.0, 0.05, LATENCY))},
+        mode="mirage", scheduler="slo", prefix_sharing=True)
+    sc = Autoscaler(policy=SLOSlackPolicy(slack_out=0.4, slack_in=6.0),
+                    min_replicas=1, max_replicas=3, window=2.0,
+                    cooldown=1.0, prewarm=True)
+    fc = FleetPrefixCache(page_size=32)
+    g = ReplicaGroup.from_config(cfg, 1, backend="sim", fleet_cache=fc,
+                                 autoscaler=sc)
+    trace = make_trace([TraceSpec(A, "sharegpt", 20.0, duration=4.0)],
+                       seed=3)
+    met = g.run(trace)
+    assert sc.decisions, "burst never tripped the slack policy"
+    assert g.finished_count == len(trace)
+    assert met.unfinished == 0

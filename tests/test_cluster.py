@@ -118,6 +118,35 @@ def test_router_prefix_affinity_is_sticky_and_seed_stable():
     assert a == Router(PREFIX_AFFINITY, seed=7)._affinity_home(_req(), 3)
 
 
+def test_router_forget_replica_purges_and_renumbers():
+    """Scale-in regression: removing a replica must purge its entries
+    from the assignments audit map and renumber survivors to the group's
+    post-delete indices — stale entries used to keep pointing at dead or
+    shifted replicas forever."""
+    reps = [FakeReplica(load=l) for l in (0, 1, 2)]
+    r = Router(LEAST_LOADED)
+    assert r.route(_req("a"), reps) == 0
+    r.assignments["b"], r.assignments["c"] = 1, 2
+    r.forget_replica(1)
+    assert r.assignments == {"a": 0, "c": 1}   # b purged, c shifted down
+    r.forget_replica(0)
+    assert r.assignments == {"c": 0}
+
+
+def test_router_routable_restricts_pool():
+    """A dynamic fleet's warming/leaving members are handed to route()
+    as an exclusion via ``routable``; draining exclusion still applies
+    within the pool, and an all-draining pool still routes."""
+    reps = [FakeReplica(load=0), FakeReplica(load=5), FakeReplica(load=1)]
+    r = Router(LEAST_LOADED)
+    assert r.route(_req("a"), reps, routable=[1, 2]) == 2
+    reps[2]._draining = True
+    assert r.route(_req("b"), reps, routable=[1, 2]) == 1
+    reps[1]._draining = True
+    # all-draining pool: fall back to the whole pool, normal policy pick
+    assert r.route(_req("c"), reps, routable=[1, 2]) == 2
+
+
 def test_router_rejects_unknown_policy():
     with pytest.raises(ValueError, match="policy"):
         Router("round_robin")
@@ -199,6 +228,30 @@ def test_coordination_cursor_advances_when_holder_drains():
     reps[0]._draining = False
     pol.apply(reps)
     assert reps[1].reversion_enabled and not reps[0].reversion_enabled
+
+
+def test_coordination_cursor_advances_past_removed_unit():
+    """Scale-in regression: the sticky cursor must not keep pointing at a
+    departed unit's index. When the holder leaves, its successor (same
+    position after the shift) inherits a fresh lease; cursors past the
+    removal point shift down with their units — otherwise the grant lands
+    on whichever unit inherited the index and reversion stalls."""
+    pol = CoordinatedRemapPolicy()
+    pol._grant, pol._held = 2, 5
+    pol.on_remove(2, 3)                        # holder departs (last idx)
+    assert (pol._grant, pol._held) == (0, 0)   # wraps; fresh lease
+    pol._grant, pol._held = 2, 5
+    pol.on_remove(0, 3)                        # removal below the cursor
+    assert (pol._grant, pol._held) == (1, 5)   # shifts with its unit
+    pol._grant, pol._held = 1, 5
+    pol.on_remove(1, 3)                        # holder departs (mid idx)
+    assert (pol._grant, pol._held) == (1, 0)   # successor at same slot
+    pol.on_remove(0, 1)                        # fleet collapses to zero
+    assert (pol._grant, pol._held) == (0, 0)
+    # post-removal apply still grants exactly one unit on the new fleet
+    reps = [FakeReplica(), FakeReplica()]
+    pol.apply(reps)
+    assert sum(r.reversion_enabled for r in reps) == 1
 
 
 # --------------------------------------------- single-replica equivalence

@@ -236,6 +236,62 @@ def test_fleet_prefix_cache_identical(link):
     assert mets[False]._fleet_lookup_tokens > 0
 
 
+# -------------------------------------------------- autoscaling membership
+def test_autoscaling_membership_identical():
+    """Elastic membership across both paths: a scripted pre-warmed
+    scale-out and a later scale-in (respill + remap-aware teardown drain)
+    driven identically through fast and reference sims must stay
+    bit-identical — metrics, fleet-cache counters, AND the membership
+    event log (same fleet-clock instants, same uids)."""
+    from repro.cluster import FleetPrefixCache, ReplicaGroup, Router
+    from repro.serving import RuntimeConfig, TenantSpec
+    from repro.serving.traces import ConversationSpec, multi_turn_trace
+
+    hw = GH200.with_host_link("pcie5")
+
+    def config():
+        return RuntimeConfig(
+            tenants={A: TenantSpec(ARCHS[A], max_batch=8,
+                                   mem_fraction=frac(A, 2.0, hw))},
+            mode="mirage", scheduler="temporal", prefix_sharing=True)
+
+    def trace():
+        return multi_turn_trace(
+            [ConversationSpec(A, num_sessions=8, turns=3,
+                              system_prompt_len=256, user_len=32,
+                              assistant_len=64, max_new_tokens=32,
+                              think_time=1.0, session_rate=2.0)], seed=3)
+
+    mets, stats, events, done = {}, {}, {}, {}
+    for fast in (False, True):
+        fc = FleetPrefixCache(page_size=32)
+        group = ReplicaGroup.from_config(
+            config(), 2, backend="sim", router=Router("least_loaded"),
+            fleet_cache=fc, fast=fast, hw=hw)
+        n = len(trace())
+        group.submit(trace())
+        added = removed = False
+        while group.busy() and group.ticks < 1_000_000:
+            group.tick()
+            if not added and group._wall > 2.0:
+                group.add_replica(prewarm=True)
+                added = True
+            if added and not removed and group._wall > 5.0 \
+                    and group.n_active == 3:
+                group.remove_replica(0)
+                removed = True
+        assert added and removed
+        assert group.finished_count == n     # conservation on each path
+        mets[fast] = group.metrics()
+        stats[fast] = fc.stats
+        events[fast] = group.events
+        done[fast] = group.finished_count
+    assert_metrics_identical(mets[False], mets[True], "autoscale")
+    assert stats[False] == stats[True]
+    assert events[False] == events[True]
+    assert done[False] == done[True]
+
+
 # --------------------------------------------------------- random traces
 def _requests_from_shape(shape, seed=0):
     """Lower a hypothesis-drawn shape into Request objects: per-request

@@ -123,6 +123,70 @@ def measure(n: int = N_REQUESTS, mode: str = "vllm",
     return out
 
 
+def measure_churn(n_sessions: int = 96):
+    """Membership-churn variant of :func:`measure`: a two-replica fleet
+    on multi-turn traffic takes a scripted pre-warmed scale-out and a
+    later scale-in (respill + remap-aware teardown drain) through the
+    reference and fast paths. Asserts fleet metrics, fleet-cache
+    counters, and the membership event log are identical, and returns
+    the per-path tick-loop wall seconds plus the speedup ratio — the
+    elastic machinery must not erode the fast path's advantage."""
+    from benchmarks.common import frac
+    from repro.cluster import FleetPrefixCache, ReplicaGroup, Router
+    from repro.configs.registry import ARCHS
+    from repro.serving.hw import GH200
+    from repro.serving import RuntimeConfig, TenantSpec
+    from repro.serving.traces import ConversationSpec, multi_turn_trace
+
+    A = "llama3-8b"
+    hw = GH200.with_host_link("pcie5")
+    out = {"n_sessions": n_sessions}
+    mets, stats, events = {}, {}, {}
+    for fast in (False, True):
+        cfg = RuntimeConfig(
+            tenants={A: TenantSpec(ARCHS[A], max_batch=16,
+                                   mem_fraction=frac(A, 2.0, hw))},
+            mode="mirage", scheduler="temporal", prefix_sharing=True)
+        fc = FleetPrefixCache(page_size=32)
+        group = ReplicaGroup.from_config(
+            cfg, 2, backend="sim", router=Router("least_loaded"),
+            fleet_cache=fc, fast=fast, hw=hw)
+        reqs = multi_turn_trace(
+            [ConversationSpec(A, num_sessions=n_sessions, turns=3,
+                              system_prompt_len=256, user_len=32,
+                              assistant_len=64, max_new_tokens=32,
+                              think_time=1.0, session_rate=8.0)], seed=11)
+        group.submit(reqs)
+        added = removed = False
+        t0 = time.perf_counter()
+        while group.busy() and group.ticks < 2_000_000:
+            group.tick()
+            if not added and group._wall > 2.0:
+                group.add_replica(prewarm=True)
+                added = True
+            if added and not removed and group._wall > 6.0 \
+                    and group.n_active == 3:
+                group.remove_replica(0)
+                removed = True
+        wall = time.perf_counter() - t0
+        assert added and removed, "churn script did not fire"
+        assert group.finished_count == len(reqs), \
+            f"lost requests: {group.finished_count}/{len(reqs)}"
+        mets[fast] = group.metrics()
+        stats[fast] = fc.stats
+        events[fast] = group.events
+        key = "fast" if fast else "reference"
+        out[key] = {"sim_wall_s": wall,
+                    "requests_per_s": len(reqs) * 3 / wall}
+    bad = _metrics_mismatch(mets[False], mets[True])
+    assert bad is None, f"churn: fast diverged from reference on {bad!r}"
+    assert stats[False] == stats[True], "churn: fleet-cache stats diverged"
+    assert events[False] == events[True], "churn: membership events diverged"
+    out["speedup"] = (out["reference"]["sim_wall_s"]
+                      / out["fast"]["sim_wall_s"])
+    return out
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("-n", type=int, default=N_REQUESTS,
@@ -155,6 +219,16 @@ def main() -> int:
         if fast["requests_per_s"] < floor:
             print(f"FAIL: fast path regressed >{MAX_REGRESSION:.0%} below "
                   f"baseline")
+            ok = False
+    if args.check:
+        churn = measure_churn()
+        ref_w = churn["reference"]["sim_wall_s"]
+        fast_w = churn["fast"]["sim_wall_s"]
+        print(f"churn:     ref {ref_w:6.2f}s  fast {fast_w:6.2f}s  "
+              f"{churn['speedup']:.2f}x   (metrics/events identical)")
+        if fast_w > ref_w:
+            print("FAIL: fast path slower than reference under "
+                  "membership churn")
             ok = False
     if args.save:
         with open(BASELINE, "w") as f:
